@@ -1,0 +1,114 @@
+"""Shared benchmark infrastructure.
+
+``trained_model()`` trains a small decoder LM from scratch on the
+structured synthetic stream (sinks + copied motifs) and caches it under
+results/bench_model — so the accuracy benchmarks measure Stem on *real*
+attention distributions (sinks and heavy hitters emerge within a few
+hundred steps even at this scale), exactly the quantities the paper's
+Table 1 / Table 5 / Figures 3 & 5 report (sparse-vs-dense MSE), rather
+than white-noise QKV.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, optim
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.core.config import StemConfig
+from repro.data import SyntheticLMData
+from repro.models import registry, transformer
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results")
+
+BENCH_ARCH = ArchConfig(
+    name="bench-lm", family="dense", num_layers=6, d_model=128,
+    num_heads=4, num_kv_heads=2, head_dim=32, d_ff=384, vocab_size=512,
+    qk_norm=True, dtype="float32",
+)
+BENCH_SEQ = 2048
+BENCH_STEPS = 300
+
+# Block/budget geometry scaled to the bench model (seq 2048, B=32 -> 64
+# blocks; paper geometry B=128 over 8k-128k scales equivalently).
+def bench_stem(**kw) -> StemConfig:
+    base = dict(block_size=32, k_start_frac=0.25, mu=0.7, beta=0.2,
+                sink_blocks=1, local_blocks=1, min_budget_blocks=2, stride=8)
+    base.update(kw)
+    return StemConfig(**base)
+
+
+def data_stream(seq_len=BENCH_SEQ, batch=8) -> SyntheticLMData:
+    return SyntheticLMData(vocab_size=BENCH_ARCH.vocab_size, seq_len=seq_len,
+                           global_batch=batch, seed=42, motif_len=48)
+
+
+def trained_model():
+    """(cfg, params) — trained once, cached on disk."""
+    cfg = BENCH_ARCH
+    mgr = CheckpointManager(os.path.join(RESULTS, "bench_model"), keep=1)
+    bundle = registry.build(cfg)
+    abstract_values, _ = bundle.abstract_params()
+    if mgr.latest_step() is not None:
+        params, _ = mgr.restore(abstract_values)
+        return cfg, params
+    print("# training bench model (~300 steps, cached afterwards)...", flush=True)
+    data = data_stream(seq_len=256, batch=16)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    opt_cfg = optim.AdamWConfig(peak_lr=1e-3, warmup_steps=20, decay_steps=BENCH_STEPS)
+    state = optim.init_state(params, opt_cfg)
+
+    @jax.jit
+    def step(state, batch):
+        def loss_of(m):
+            p = jax.tree.map(lambda t: t.astype(cfg.jnp_dtype), m)
+            return bundle.loss_fn(p, batch, remat=False)[0]
+        loss, g = jax.value_and_grad(loss_of)(state.master)
+        state, _ = optim.update(g, state, opt_cfg)
+        return state, loss
+
+    for i in range(BENCH_STEPS):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, loss = step(state, b)
+        if i % 100 == 0:
+            print(f"#   step {i}: loss {float(loss):.3f}", flush=True)
+    params = optim.cast_params(state, params)
+    mgr.save(BENCH_STEPS, params)
+    return cfg, params
+
+
+def eval_batch(seq_len=BENCH_SEQ, batch=4):
+    d = data_stream(seq_len=seq_len, batch=batch)
+    return {k: jnp.asarray(v) for k, v in d.batch_at(10_001).items()}
+
+
+def head_logit_mse(cfg, params, batch, stem_cfg) -> dict:
+    """Paper's 'Head Logits' loss + per-layer MSE (Table 1 quantities)."""
+    dense_logits, dense_h = transformer.forward_hiddens(params, batch, cfg)
+    sparse_logits, sparse_h = transformer.forward_hiddens(params, batch, cfg,
+                                                          stem_cfg=stem_cfg)
+    out = {"head_logits_mse": float(jnp.mean((dense_logits - sparse_logits) ** 2))}
+    li = 0
+    for dh, sh in zip(dense_h, sparse_h):
+        for l in range(dh.shape[0]):
+            out[f"L{li}"] = float(jnp.mean(
+                (dh[l].astype(jnp.float32) - sh[l].astype(jnp.float32)) ** 2))
+            li += 1
+    return out
+
+
+def timer(fn, *args, repeats=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)

@@ -1,0 +1,44 @@
+"""Paper Figure 1 analog: prefill attention cost, Dense vs Stem vs baselines.
+
+On this CPU container wall-clock is a proxy (XLA-CPU, fp32); the transferable
+quantities are the computed-pair budgets and FLOP counts, which are
+hardware-independent, plus the wall-time *ratio* trend across lengths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import StemConfig, schedule, stem_attention
+from repro.core.sparse_attention import dense_attention_chunked
+from repro.core.baselines import baseline_attention
+
+
+def run() -> list[tuple]:
+    rows = []
+    B, Hq, Hk, D = 1, 4, 2, 64
+    for n in (2048, 4096, 8192, 16384):
+        ks = jax.random.split(jax.random.PRNGKey(n), 3)
+        q = jax.random.normal(ks[0], (B, Hq, n, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Hk, n, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Hk, n, D), jnp.float32)
+        cfg = common.bench_stem(block_size=128, k_start_frac=None,
+                                min_budget_blocks=4)
+
+        dense_t = common.timer(
+            functools.partial(dense_attention_chunked, causal=True), q, k, v)
+        stem_fn = jax.jit(functools.partial(stem_attention, cfg=cfg))
+        stem_t = common.timer(lambda q, k, v: stem_fn(q=q, k=k, v=v), q, k, v)
+
+        budgets = schedule.schedule_for(cfg, n)
+        pairs_dense = n * (n + 1) / 2
+        pairs_stem = schedule.measured_cost_blocks(budgets, cfg.block_size)
+        rows.append((f"fig1/dense_n{n}", dense_t * 1e6,
+                     f"pairs={pairs_dense:.3g}"))
+        rows.append((f"fig1/stem_n{n}", stem_t * 1e6,
+                     f"pairs={pairs_stem:.3g};speedup={dense_t/stem_t:.2f}x;"
+                     f"budget={pairs_stem/pairs_dense:.3f}"))
+    return rows

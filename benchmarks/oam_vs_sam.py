@@ -1,0 +1,98 @@
+"""Paper Table 1: SAM vs OAM sparse loss at a fixed budget.
+
+Measures per-layer residual MSE and head-logit MSE on the trained bench
+model — the same quantities (L5/L15/... + Head Logits) the paper reports,
+expecting OAM <= SAM.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run() -> list[tuple]:
+    cfg, params = common.trained_model()
+    batch = common.eval_batch()
+    rows = []
+    results = {}
+    for metric in ("sam", "oam"):
+        stem_cfg = common.bench_stem(metric=metric)
+        r = common.head_logit_mse(cfg, params, batch, stem_cfg)
+        results[metric] = r
+        per_layer = ";".join(f"L{i}={r[f'L{i}']:.3e}" for i in range(cfg.num_layers))
+        rows.append((f"table1/{metric}", 0.0,
+                     f"head_logits={r['head_logits_mse']:.4e};{per_layer}"))
+    ratio = results["oam"]["head_logits_mse"] / max(results["sam"]["head_logits_mse"], 1e-30)
+    rows.append(("table1/oam_over_sam", 0.0,
+                 f"ratio={ratio:.4f};oam_wins_or_ties={ratio <= 1.01}"))
+    rows.extend(_structured_mechanism())
+    return rows
+
+
+def _structured_mechanism() -> list[tuple]:
+    """Controlled demonstration of the OAM mechanism in its designed-for
+    regime (Eq. 5): blocks with *comparable routing scores* but different
+    value magnitudes.  SAM cannot distinguish them (random tie-breaks);
+    OAM keeps the blocks whose omission actually moves the output.
+    Note the converse also holds (and the ablation's beta sweep shows it):
+    when routing is informative and ||V|| anti-correlates with it, a large
+    beta hurts — that's the paper's own 'excessive magnitude weight
+    introduces noise' caveat."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import StemConfig, dense_attention, stem_attention
+
+    B, H, N, D = 2, 4, 2048, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(ks[0], (B, H, N, D))
+    k = jax.random.normal(ks[1], (B, H, N, D)) * 0.2
+    v = jax.random.normal(ks[2], (B, H, N, D)) * 0.2
+    # 20 candidate tokens with EQUAL high routing (aligned with q); half
+    # carry large values, half near-zero values.  SAM cannot rank within the
+    # tie and drops consequential blocks at random; OAM keeps the big-||V||
+    # half, whose omission is what actually moves the output.
+    cand = jnp.arange(40, N, 100)[:20]
+    big, small = cand[0::2], cand[1::2]
+    k = k.at[:, :, cand].set(q.mean(axis=2, keepdims=True)[:, :, 0][:, :, None] * 1.5
+                             + 0.05 * jax.random.normal(ks[3], (B, H, 20, D)))
+    v = v.at[:, :, big].set(jax.random.normal(ks[4], (B, H, len(big), D)) * 4.0)
+    v = v.at[:, :, small].set(0.01)
+    dense = dense_attention(q, k, v)
+
+    # Eq. 5 objective — the paper's own selection criterion: the
+    # non-renormalized truncation error || sum_{j not in S} P_ij V_j ||.
+    # (Appendix A.1 derives OAM from exactly this surrogate, explicitly
+    # "without renormalizing probabilities".)
+    from repro.core.selection import block_mask_to_token_mask
+    from repro.core.sparse_attention import select_for
+
+    scale = D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((N, N), bool))
+    p = jax.nn.softmax(jnp.where(causal, s, -1e30), axis=-1)
+
+    out = []
+    trunc, renorm = {}, {}
+    for metric in ("sam", "oam"):
+        sc = common.bench_stem(metric=metric, k_start_frac=0.15, mu=1.0,
+                               min_budget_blocks=1)
+        sel, _ = select_for(q, k, v, sc)
+        tok = block_mask_to_token_mask(sel.block_mask, sc.block_size,
+                                       sc.block_size, N, N)
+        dropped = jnp.einsum("bhqk,bhkd->bhqd", jnp.where(tok, 0.0, p), v)
+        trunc[metric] = float(jnp.mean(jnp.linalg.norm(dropped, axis=-1)))
+        o = stem_attention(q, k, v, sc)
+        renorm[metric] = float(jnp.mean((o - dense) ** 2))
+        out.append((f"table1/structured_{metric}", 0.0,
+                    f"eq5_truncation={trunc[metric]:.4e};renormalized_mse={renorm[metric]:.4e}"))
+    out.append(("table1/structured_gap", 0.0,
+                f"eq5_oam/sam={trunc['oam']/trunc['sam']:.3f};"
+                f"oam_wins_eq5={trunc['oam'] < trunc['sam']};"
+                f"renorm_oam/sam={renorm['oam']/renorm['sam']:.3f}"))
+    # Finding worth recording: under the *renormalized* softmax that real
+    # sparse executors use, magnitude-led selection can over-weight the kept
+    # high-energy blocks when dropped probability mass is large — Eq. 5's
+    # surrogate ignores renormalization.  On trained models (where routing
+    # concentrates and ||V|| correlates with importance) OAM still wins the
+    # end-to-end comparison above.
+    return out

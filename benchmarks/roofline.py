@@ -1,0 +1,60 @@
+"""Roofline collation: reads results/dryrun/*.json -> the EXPERIMENTS.md
+tables (per arch x shape x mesh: three terms, bottleneck, MODEL_FLOPS
+ratio, memory fit)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+HBM_PER_CHIP = 16e9   # v5e
+
+
+def load_records(pattern="*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(common.RESULTS, "dryrun", pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def to_markdown(recs, multi_pod: bool) -> str:
+    rows = [r for r in recs if r.get("multi_pod") == multi_pod]
+    if not rows:
+        return "(no records)"
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+           "| MODEL/HLO flops | peak GB/chip | fits v5e |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        peak = r.get("memory", {}).get("peak_bytes", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"{rf['bottleneck'].replace('_s','')} | "
+            f"{r.get('model_flops_ratio', 0):.2f} | {peak:.1f} | "
+            f"{'yes' if peak and peak <= HBM_PER_CHIP/1e9 else 'NO'} |\n")
+    return "".join(out)
+
+
+def run() -> list[tuple]:
+    recs = load_records()
+    rows = []
+    for r in recs:
+        rf = r["roofline"]
+        mesh = "multipod" if r["multi_pod"] else "pod"
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / dom if dom else 0.0
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+            dom * 1e6,                       # dominant term as us_per_call
+            f"bottleneck={rf['bottleneck']};compute_fraction={frac:.3f};"
+            f"flops/dev={r['flops_per_device']:.3e};"
+            f"coll={r['collectives']['total_bytes']:.3e}"))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run repro.launch.dryrun first"))
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is 0 for pure
+accuracy benchmarks).  Mapping to the paper:
+
+  latency.py              Figure 1 (prefill latency/FLOPs vs length)
+  oam_vs_sam.py           Table 1  (SAM vs OAM sparse loss)
+  ablation.py             Table 5  (Uniform / +TPD / +OAM, matched budget)
+  sensitivity.py          Figure 5 (mu, beta sweeps)
+  position_sensitivity.py Figure 3 (loss vs sparsified position segment)
+  cost_model.py           Eq. 2/4  (analytic vs measured computed pairs)
+  roofline.py             EXPERIMENTS.md roofline collation (from dry-run)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablation, cost_model, latency, oam_vs_sam,
+                            position_sensitivity, roofline, sensitivity)
+
+    modules = [
+        ("cost_model", cost_model),
+        ("latency", latency),
+        ("oam_vs_sam", oam_vs_sam),
+        ("ablation", ablation),
+        ("sensitivity", sensitivity),
+        ("position_sensitivity", position_sensitivity),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.2f},{derived}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/ERROR,0,failed")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

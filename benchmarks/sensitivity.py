@@ -1,0 +1,22 @@
+"""Paper Figure 5: mu and beta sensitivity sweeps.
+
+Expected shapes: accuracy (here: -MSE) improves with mu toward ~0.7 then
+saturates; beta has a unimodal optimum near 0.2 with beta=0 (pure SAM)
+strictly worse.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run() -> list[tuple]:
+    cfg, params = common.trained_model()
+    batch = common.eval_batch()
+    rows = []
+    for mu in (0.5, 0.6, 0.7, 0.8, 0.9, 1.0):
+        r = common.head_logit_mse(cfg, params, batch, common.bench_stem(mu=mu))
+        rows.append((f"fig5/mu_{mu}", 0.0, f"head_logits={r['head_logits_mse']:.4e}"))
+    for beta in (0.0, 0.1, 0.2, 0.3, 0.5):
+        r = common.head_logit_mse(cfg, params, batch, common.bench_stem(beta=beta))
+        rows.append((f"fig5/beta_{beta}", 0.0, f"head_logits={r['head_logits_mse']:.4e}"))
+    return rows

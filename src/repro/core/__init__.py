@@ -1,0 +1,36 @@
+"""Stem core: Token Position-Decay + Output-Aware Metric sparse attention."""
+from repro.core.config import StemConfig, uniform_equivalent_budget
+from repro.core.schedule import (
+    average_budget,
+    cost_decay,
+    cost_uniform,
+    max_budget_blocks,
+    measured_cost_tokens,
+    schedule_for,
+    tpd_budget_blocks,
+    tpd_budget_tokens,
+)
+from repro.core.metric import oam_metric, routing_scores, value_block_magnitude
+from repro.core.selection import BlockSelection, select_blocks
+from repro.core.sparse_attention import StemStats, dense_attention, stem_attention
+
+__all__ = [
+    "StemConfig",
+    "uniform_equivalent_budget",
+    "tpd_budget_tokens",
+    "tpd_budget_blocks",
+    "schedule_for",
+    "max_budget_blocks",
+    "cost_uniform",
+    "cost_decay",
+    "measured_cost_tokens",
+    "average_budget",
+    "oam_metric",
+    "routing_scores",
+    "value_block_magnitude",
+    "BlockSelection",
+    "select_blocks",
+    "stem_attention",
+    "dense_attention",
+    "StemStats",
+]

@@ -1,0 +1,95 @@
+"""Configuration for the Stem sparse-attention module.
+
+Defaults follow the paper (Section 3.1 Implementation Details):
+block size B = 128, decay ratio mu = 0.7, metric coefficient beta = 0.2,
+4 sink + 4 local blocks, minimum per-row budget of 54 blocks, and
+k_start = 0.2 * N_blk for sequences of 8k-16k tokens / 0.1 * N_blk above 16k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class StemConfig:
+    """Hyper-parameters of Stem (Token Position-Decay + Output-Aware Metric).
+
+    Attributes:
+      block_size: attention block granularity B (MXU-aligned; paper uses 128).
+      k_start_frac: initial budget as a fraction of the number of key blocks.
+        ``None`` selects the paper's length-dependent rule (0.2 for N <= 16k,
+        0.1 above).
+      mu: decay ratio in (0, 1]; k_end = mu * k_start (Eq. 3). mu = 1 is the
+        uniform schedule.
+      beta: weight of the value-magnitude term in the Output-Aware Metric
+        (Eq. 7).
+      stride: anti-diagonal sampling stride ``s`` for metric downsampling;
+        the pooled representation keeps ``s`` group-mean vectors per block.
+      sink_blocks: leading key blocks always retained (attention sink).
+      local_blocks: trailing (diagonal-local) key blocks always retained.
+      min_budget_blocks: per-query-row floor on the number of key blocks.
+      pooling: "antidiag" (XAttention-style separable anti-diagonal pooling)
+        or "mean" (plain block mean pooling).
+      metric: "oam" (Eq. 7) or "sam" (routing-only score; ablation baseline).
+      group_reduce: how to share selection across the query heads of one KV
+        group for GQA models: "none" (per-query-head selection, paper
+        default), "mean" or "max" (InfLLMv2-style shared selection).
+      backend: "xla" (gather-based sparse execution; used under pjit),
+        "pallas" (TPU kernel; interpret mode on CPU) or "dense" (O(N^2)
+        masked oracle, tests only).
+      slot_chunk: number of selected key blocks processed per inner step of
+        the XLA flash-style executor (memory/latency trade-off).
+    """
+
+    block_size: int = 128
+    k_start_frac: Optional[float] = None
+    mu: float = 0.7
+    beta: float = 0.2
+    stride: int = 16
+    sink_blocks: int = 4
+    local_blocks: int = 4
+    min_budget_blocks: int = 54
+    pooling: str = "antidiag"
+    metric: str = "oam"
+    group_reduce: str = "none"
+    backend: str = "xla"
+    slot_chunk: int = 8
+    # Analysis knob (paper Fig. 3): when set to (lo, hi) fractions, only
+    # query rows in [lo*N, hi*N) are sparsified; all other rows keep their
+    # full causal budget.  None = sparsify everywhere (normal operation).
+    sparse_segment: Optional[tuple] = None
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.mu <= 1.0):
+            raise ValueError(f"mu must be in (0, 1], got {self.mu}")
+        if self.beta < 0.0:
+            raise ValueError(f"beta must be >= 0, got {self.beta}")
+        if self.block_size <= 0 or self.block_size % 8 != 0:
+            raise ValueError(f"block_size must be a positive multiple of 8, got {self.block_size}")
+        if self.stride <= 0 or self.block_size % self.stride != 0:
+            raise ValueError("stride must divide block_size")
+        if self.pooling not in ("antidiag", "mean"):
+            raise ValueError(f"unknown pooling {self.pooling!r}")
+        if self.metric not in ("oam", "sam"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+        if self.group_reduce not in ("none", "mean", "max"):
+            raise ValueError(f"unknown group_reduce {self.group_reduce!r}")
+        if self.backend not in ("xla", "pallas", "dense"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    def k_start_fraction(self, seq_len: int) -> float:
+        """Paper's length-dependent initial-budget fraction (Section 3.1)."""
+        if self.k_start_frac is not None:
+            return self.k_start_frac
+        return 0.2 if seq_len <= 16384 else 0.1
+
+    def k_start_blocks(self, seq_len: int) -> int:
+        n_blocks = -(-seq_len // self.block_size)
+        return max(1, int(self.k_start_fraction(seq_len) * n_blocks))
+
+
+# Budget-matched uniform equivalent used in the paper's ablation (Table 5):
+# k_uni ~= k_start * (1 + mu) / 2.
+def uniform_equivalent_budget(k_start: int, mu: float) -> int:
+    return max(1, int(round(k_start * (1.0 + mu) / 2.0)))

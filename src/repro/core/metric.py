@@ -1,0 +1,173 @@
+"""Output-Aware Metric (OAM) and block-wise metric downsampling.
+
+Implements the coarse metric of Algorithm 1 (lines 4-6 and 11-13):
+
+  * anti-diagonal downsampling of Q and K (XAttention-style).  The strided
+    anti-diagonal score sum over a B x B tile,
+        sum_{(a+b) mod s == 0} q_a . k_b,
+    factors into group sums:  b = -a (mod s), hence
+        sum_u  < G_q[u], G_k[(s-u) mod s] >,
+    where G_q[u] = sum_{a mod s == u} q_a.  We keep *group means* so the
+    pooled score approximates the mean attention logit of the tile, keeping
+    the beta = 0.2 scale of Eq. (7) meaningful.
+  * block max-pooled value magnitude  M_V = maxpool(log ||V_j||_2).
+  * metric assembly (Eq. 7):  M = QK^T/sqrt(d) + beta * max(0, M_V).
+
+Shapes use the (batch, heads, seq, head_dim) convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import StemConfig
+
+
+def _check_divisible(seq_len: int, block_size: int) -> int:
+    if seq_len % block_size != 0:
+        raise ValueError(f"seq_len {seq_len} must be a multiple of block_size {block_size}")
+    return seq_len // block_size
+
+
+def antidiag_pool(x: jnp.ndarray, block_size: int, stride: int) -> jnp.ndarray:
+    """Group-mean pooling for separable anti-diagonal scoring.
+
+    Args:
+      x: (..., seq, dim)
+      block_size: tile size B.
+      stride: anti-diagonal stride s (must divide B).
+
+    Returns:
+      (..., n_blocks, stride, dim) — group u holds the mean of rows whose
+      within-block position is congruent to u (mod s).
+    """
+    *lead, seq, dim = x.shape
+    n_blocks = _check_divisible(seq, block_size)
+    per_group = block_size // stride
+    # (..., n_blocks, per_group, stride, dim): position p = g * stride + u.
+    xb = x.reshape(*lead, n_blocks, per_group, stride, dim)
+    return xb.mean(axis=-3)
+
+
+def mean_pool(x: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Plain block mean pooling: (..., seq, dim) -> (..., n_blocks, dim)."""
+    *lead, seq, dim = x.shape
+    n_blocks = _check_divisible(seq, block_size)
+    return x.reshape(*lead, n_blocks, block_size, dim).mean(axis=-2)
+
+
+def antidiag_routing_scores(
+    q_pooled: jnp.ndarray, k_pooled: jnp.ndarray, head_dim: int
+) -> jnp.ndarray:
+    """Blockwise routing scores from anti-diagonal group means.
+
+    Args:
+      q_pooled: (..., nq, s, d) group means of Q.
+      k_pooled: (..., nk, s, d) group means of K.
+      head_dim: original head dimension (softmax scale uses sqrt(head_dim)).
+
+    Returns:
+      (..., nq, nk) approximate mean attention logits per block pair.
+    """
+    s = q_pooled.shape[-2]
+    # Pair group u of Q with group (s - u) mod s of K.
+    pair = (s - jnp.arange(s)) % s
+    k_matched = jnp.take(k_pooled, pair, axis=-2)
+    scores = jnp.einsum("...iud,...jud->...ij", q_pooled, k_matched)
+    return scores / (s * jnp.sqrt(jnp.asarray(head_dim, dtype=scores.dtype)))
+
+
+def mean_routing_scores(
+    q_pooled: jnp.ndarray, k_pooled: jnp.ndarray, head_dim: int
+) -> jnp.ndarray:
+    """Blockwise routing from plain mean pooling: (..., nq, nk)."""
+    scores = jnp.einsum("...id,...jd->...ij", q_pooled, k_pooled)
+    return scores / jnp.sqrt(jnp.asarray(head_dim, dtype=scores.dtype))
+
+
+def value_block_magnitude(v: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """M_V: block max-pool of log ||V_j||_2  (Algorithm 1, line 6).
+
+    Args:
+      v: (..., seq, dim)
+    Returns:
+      (..., n_blocks) float32.
+    """
+    *lead, seq, dim = v.shape
+    n_blocks = _check_divisible(seq, block_size)
+    norms = jnp.linalg.norm(v.astype(jnp.float32), axis=-1)  # (..., seq)
+    log_norms = jnp.log(jnp.maximum(norms, 1e-20))
+    return log_norms.reshape(*lead, n_blocks, block_size).max(axis=-1)
+
+
+def routing_scores(
+    q: jnp.ndarray, k: jnp.ndarray, cfg: StemConfig
+) -> jnp.ndarray:
+    """Downsampled routing scores between all (query block, key block) pairs.
+
+    Args:
+      q: (batch, q_heads, seq_q, d)
+      k: (batch, kv_heads, seq_k, d) — kv_heads must divide q_heads.
+
+    Returns:
+      (batch, q_heads, nq, nk) approximate mean logits.
+    """
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    if hq % hk != 0:
+        raise ValueError(f"q_heads {hq} not a multiple of kv_heads {hk}")
+    group = hq // hk
+    if cfg.pooling == "antidiag":
+        qp = antidiag_pool(q, cfg.block_size, cfg.stride)  # (b, hq, nq, s, d)
+        kp = antidiag_pool(k, cfg.block_size, cfg.stride)  # (b, hk, nk, s, d)
+        kp = jnp.repeat(kp, group, axis=1)
+        return antidiag_routing_scores(qp, kp, d)
+    qp = mean_pool(q, cfg.block_size)
+    kp = jnp.repeat(mean_pool(k, cfg.block_size), group, axis=1)
+    return mean_routing_scores(qp, kp, d)
+
+
+def oam_metric(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: StemConfig,
+) -> jnp.ndarray:
+    """Full coarse metric of Eq. (7) at block granularity.
+
+    Args:
+      q: (batch, q_heads, seq_q, d)
+      k, v: (batch, kv_heads, seq_k, d)
+
+    Returns:
+      (batch, q_heads, nq, nk) metric; higher = more important.
+    """
+    route = routing_scores(q, k, cfg)
+    if cfg.metric == "sam" or cfg.beta == 0.0:
+        return route
+    group = q.shape[1] // k.shape[1]
+    mv = value_block_magnitude(v, cfg.block_size)  # (b, hk, nk)
+    mv = jnp.repeat(mv, group, axis=1)  # (b, hq, nk)
+    mag = jnp.maximum(mv, 0.0).astype(route.dtype)
+    return route + cfg.beta * mag[..., None, :]
+
+
+def group_reduce_metric(metric: jnp.ndarray, group: int, mode: str) -> jnp.ndarray:
+    """Optionally share the metric across the query heads of a KV group.
+
+    Args:
+      metric: (b, hq, nq, nk)
+      group: q_heads // kv_heads
+      mode: "none" | "mean" | "max"
+
+    Returns:
+      (b, hq, nq, nk) — for "mean"/"max" every head in a group carries the
+      group-reduced metric, so downstream top-k selects identical blocks for
+      the whole group (InfLLMv2-style sharing).
+    """
+    if mode == "none" or group == 1:
+        return metric
+    b, hq, nq, nk = metric.shape
+    g = metric.reshape(b, hq // group, group, nq, nk)
+    red = g.mean(axis=2) if mode == "mean" else g.max(axis=2)
+    return jnp.repeat(red, group, axis=1)

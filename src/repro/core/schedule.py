@@ -1,0 +1,127 @@
+"""Token Position-Decay (TPD) budget schedule and its cost model.
+
+Implements Eq. (3) of the paper — a per-query-position Top-k budget that
+decays linearly from ``k_start`` at the first position to
+``k_end = mu * k_start`` at the last — together with the analytic cost
+model of Eq. (2) (uniform baseline) and Eq. (4) (decay schedule).
+
+All schedule quantities exist at two granularities:
+  * token-level k(i) (the paper's formulation), and
+  * block-level budgets used by the block-sparse executor (Algorithm 1,
+    line 15), which is what the kernels consume.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import StemConfig
+
+
+def tpd_budget_tokens(seq_len: int, k_start: int, mu: float) -> np.ndarray:
+    """Eq. (3): k(i) = floor(k_start - (k_start (1-mu) / N) * i), i in [0, N).
+
+    Returns an int32 numpy array of per-query-position budgets (token units),
+    *before* causal clamping.
+    """
+    i = np.arange(seq_len, dtype=np.float64)
+    k = np.floor(k_start - (k_start * (1.0 - mu) / seq_len) * i)
+    return np.maximum(k, 1.0).astype(np.int32)
+
+
+def tpd_budget_blocks(
+    n_query_blocks: int,
+    n_key_blocks: int,
+    k_start_blocks: int,
+    mu: float,
+    *,
+    min_budget_blocks: int = 0,
+) -> np.ndarray:
+    """Block-level TPD schedule (Algorithm 1 line 15).
+
+    For query-block row i the raw budget interpolates linearly from
+    ``k_start_blocks`` down to ``mu * k_start_blocks``; it is then floored at
+    ``min_budget_blocks`` and clamped to the causally admissible count
+    (row i can attend to at most i+1 key blocks when the grids align).
+
+    Returns int32 numpy array of shape (n_query_blocks,).
+    """
+    if n_query_blocks <= 0:
+        raise ValueError("n_query_blocks must be positive")
+    i = np.arange(n_query_blocks, dtype=np.float64)
+    denom = max(n_query_blocks, 1)
+    raw = np.floor(k_start_blocks - (k_start_blocks * (1.0 - mu) / denom) * i)
+    raw = np.maximum(raw, 1.0)
+    raw = np.maximum(raw, float(min_budget_blocks))
+    # Causal clamp: row i of an aligned block grid has i+1 admissible blocks
+    # (diagonal included). If the key grid is longer (cross attention /
+    # decode), all key blocks are admissible.
+    offset = n_key_blocks - n_query_blocks
+    admissible = np.minimum(i + 1 + offset, n_key_blocks)
+    return np.minimum(raw, admissible).astype(np.int32)
+
+
+def schedule_for(cfg: StemConfig, seq_len: int, kv_len: int | None = None) -> np.ndarray:
+    """Convenience: block-level schedule for a config + sequence length."""
+    kv_len = seq_len if kv_len is None else kv_len
+    nq = -(-seq_len // cfg.block_size)
+    nk = -(-kv_len // cfg.block_size)
+    budgets = tpd_budget_blocks(
+        nq,
+        nk,
+        cfg.k_start_blocks(kv_len),
+        cfg.mu,
+        min_budget_blocks=cfg.min_budget_blocks,
+    )
+    if cfg.sparse_segment is not None:
+        # Fig. 3 analysis mode: sparsify only rows in [lo, hi) fractions.
+        lo, hi = cfg.sparse_segment
+        offset = nk - nq
+        full = np.minimum(np.arange(nq, dtype=np.int64) + 1 + offset, nk).astype(np.int32)
+        sel = np.zeros(nq, bool)
+        sel[int(lo * nq): int(hi * nq)] = True
+        budgets = np.where(sel, budgets, full).astype(np.int32)
+    return budgets
+
+
+def max_budget_blocks(cfg: StemConfig, seq_len: int, kv_len: int | None = None) -> int:
+    """Static upper bound on the per-row block budget (kernel K_max)."""
+    return int(schedule_for(cfg, seq_len, kv_len).max())
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model (Eq. 2 / Eq. 4) and measured cost.
+# ---------------------------------------------------------------------------
+
+def cost_uniform(seq_len: int, k_uni: int) -> float:
+    """Eq. (2): C_uni ~= N * k_uni - k_uni^2 / 2 (token pairs computed)."""
+    return seq_len * k_uni - 0.5 * k_uni * k_uni
+
+
+def cost_decay(seq_len: int, k_start: int, mu: float) -> float:
+    """Eq. (4): uniform baseline at k_start minus the decay savings."""
+    uniform = seq_len * k_start - 0.5 * k_start * k_start
+    savings = 0.5 * k_start * (1.0 - mu) * (seq_len - k_start)
+    return uniform - savings
+
+
+def measured_cost_tokens(seq_len: int, k_start: int, mu: float) -> int:
+    """Exact computed-pair count of the token-level schedule (causally
+    clamped): sum_i min(k(i), i+1). Used to validate Eq. (4)."""
+    k = tpd_budget_tokens(seq_len, k_start, mu).astype(np.int64)
+    avail = np.arange(1, seq_len + 1, dtype=np.int64)
+    return int(np.minimum(k, avail).sum())
+
+
+def measured_cost_blocks(budgets: np.ndarray, block_size: int) -> int:
+    """Computed token pairs implied by a block-level schedule."""
+    return int(budgets.astype(np.int64).sum()) * block_size * block_size
+
+
+def average_budget(budgets: np.ndarray) -> float:
+    """k_avg of Eq. (8) in block units."""
+    return float(np.mean(budgets))
+
+
+def budgets_as_jax(budgets: np.ndarray) -> jnp.ndarray:
+    return jnp.asarray(budgets, dtype=jnp.int32)

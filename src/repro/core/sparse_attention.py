@@ -1,0 +1,315 @@
+"""Stem sparse attention: coarse-to-fine orchestration (Algorithm 1).
+
+Pipeline per (batch, head):
+  1. pool Q/K anti-diagonally + max-pool log||V|| (metric.py),
+  2. assemble the Output-Aware Metric (Eq. 7),
+  3. per-row TPD budgets (schedule.py) -> Top-k(i) block selection
+     (selection.py),
+  4. exact attention over the selected blocks only.
+
+Three executors:
+  * "xla"    — gather-based flash-style executor in pure jnp.  This is the
+               path lowered in the distributed dry-run; it is mathematically
+               identical to the Pallas kernel.
+  * "pallas" — TPU kernel (kernels/block_sparse_attn.py) driven by the same
+               selection indices via scalar prefetch.
+  * "dense"  — O(N^2) masked oracle for tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metric as metric_lib
+from repro.core import schedule as schedule_lib
+from repro.core import selection as selection_lib
+from repro.core.config import StemConfig
+from repro.sharding.context import constrain
+
+NEG_INF = -1e30
+
+
+class StemStats(NamedTuple):
+    density: jnp.ndarray          # realized fraction of admissible blocks
+    avg_budget_blocks: jnp.ndarray
+    k_max: int
+
+
+def dense_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Reference dense attention with GQA support.
+
+    q: (b, hq, sq, d); k: (b, hk, sk, d); v: (b, hk, sk, dv) — dv may differ
+    from d (MLA).  O(N^2) — baseline & oracle.
+    """
+    b, hq, sq, d = q.shape
+    hk = k.shape[1]
+    dv = v.shape[-1]
+    group = hq // hk
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hk, group, sq, d)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    sk = k.shape[2]
+    if causal:
+        offset = sk - sq
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        cmask = kj <= qi + offset
+        scores = jnp.where(cmask, scores, NEG_INF)
+    if mask is not None:
+        # mask: (b, hq, sq, sk) boolean keep-mask.
+        scores = jnp.where(mask.reshape(b, hk, group, sq, sk), scores, NEG_INF)
+    # Guard fully-masked rows (can occur only in pathological configs).
+    row_max = scores.max(axis=-1, keepdims=True)
+    probs = jax.nn.softmax(jnp.where(row_max > NEG_INF / 2, scores, 0.0), axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "q_chunk", "kv_chunk"))
+def dense_attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style dense attention in pure XLA: streams KV chunks with an
+    online-softmax accumulator, so peak memory is O(N * chunk) instead of
+    O(N^2).  This is the memory shape the Pallas flash kernel has on TPU;
+    it's what train/prefill lower in the dry-run.
+
+    Note: causal masking is applied by masking, not by skipping chunks, so
+    the *compute* is 2x the causal-triangle minimum (documented in
+    DESIGN.md; the Stem path avoids this entirely by gathering only
+    selected blocks).
+    """
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    dv = v.shape[-1]
+    group = hq // hk
+    scale = (d ** -0.5) if scale is None else scale
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    if sq % qc or sk % kc:
+        return dense_attention(q, k, v, causal=causal, scale=scale)
+    nq, nk = sq // qc, sk // kc
+
+    qb = (q.reshape(b, hk, group, nq, qc, d).astype(jnp.float32) * scale)
+    kb = k.reshape(b, hk, nk, kc, d)
+    vb = v.reshape(b, hk, nk, kc, dv)
+    q_pos = jnp.arange(sq).reshape(nq, qc)
+
+    def body(carry, j):
+        acc, m, l = carry
+        k_j = jax.lax.dynamic_index_in_dim(kb, j, axis=2, keepdims=False)
+        v_j = jax.lax.dynamic_index_in_dim(vb, j, axis=2, keepdims=False)
+        s = jnp.einsum("bhgnqd,bhkd->bhgnqk", qb, k_j.astype(jnp.float32))
+        if causal:
+            k_pos = j * kc + jnp.arange(kc)
+            keep = k_pos[None, None] <= (sk - sq) + q_pos[:, :, None]
+            s = jnp.where(keep[None, None, None], s, NEG_INF)
+        s_max = s.max(axis=-1)
+        m_new = jnp.maximum(m, s_max)
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        if causal:
+            p = jnp.where(keep[None, None, None], p, 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgnqk,bhkd->bhgnqd", p, v_j.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hk, group, nq, qc, dv), jnp.float32)
+    m0 = jnp.full((b, hk, group, nq, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, group, nq, qc), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def dense_attention_auto(q, k, v, *, causal=True, scale=None,
+                         mask=None, threshold: int = 2048):
+    """Dispatch: chunked flash path for long sequences (no custom mask),
+    direct masked softmax otherwise."""
+    if mask is None and q.shape[2] >= threshold and k.shape[2] >= threshold:
+        return dense_attention_chunked(q, k, v, causal=causal, scale=scale)
+    return dense_attention(q, k, v, causal=causal, scale=scale, mask=mask)
+
+
+def _gather_executor(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    indices: jnp.ndarray,
+    slot_mask: jnp.ndarray,
+    *,
+    block_size: int,
+    scale: float,
+    slot_chunk: int,
+) -> jnp.ndarray:
+    """Flash-style sparse executor: per query-block row, stream the selected
+    key/value blocks in chunks with an online-softmax accumulator.
+
+    q: (b, hq, sq, d); k, v: (b, hk, sk, d);
+    indices/slot_mask: (b, hq, nq, k_max).
+    """
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    dv = v.shape[-1]
+    group = hq // hk
+    bs = block_size
+    nq, nk = sq // bs, sk // bs
+    k_max = indices.shape[-1]
+    chunk = max(1, min(slot_chunk, k_max))
+    # Pad slot dim to a multiple of the chunk size.
+    pad = (-k_max) % chunk
+    if pad:
+        indices = jnp.pad(indices, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        slot_mask = jnp.pad(slot_mask, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    n_chunks = (k_max + pad) // chunk
+
+    qb = q.reshape(b, hk, group, nq, bs, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, hk, nk, bs, d)
+    vb = v.reshape(b, hk, nk, bs, dv)
+    # Pin K/V blocks to (batch, heads) sharding: if a seq-sharded layout
+    # propagates in (e.g. from a kv_seq-sharded cache output), GSPMD cannot
+    # partition the data-dependent block gather and emits a full masked
+    # all-reduce of the gathered tensor (34 GB/layer at glm4-9b 32k —
+    # §Perf glm4 iteration 2).
+    kb = constrain(kb, ("batch", "kv_heads", None, None, None))
+    vb = constrain(vb, ("batch", "kv_heads", None, None, None))
+    idx = indices.reshape(b, hk, group, nq, n_chunks, chunk)
+    smask = slot_mask.reshape(b, hk, group, nq, n_chunks, chunk)
+
+    offset = sk - sq  # 0 for self-attention prefill/train
+    q_pos = offset + jnp.arange(sq).reshape(nq, bs)  # global query positions
+
+    def body(carry, c):
+        acc, m, l = carry
+        idx_c = jax.lax.dynamic_index_in_dim(idx, c, axis=4, keepdims=False)
+        msk_c = jax.lax.dynamic_index_in_dim(smask, c, axis=4, keepdims=False)
+        # Gather the selected key/value blocks: (b, hk, g, nq, chunk, bs, d).
+        gidx = idx_c[..., None, None]
+        k_c = jnp.take_along_axis(kb[:, :, None, None], gidx, axis=4)
+        v_c = jnp.take_along_axis(vb[:, :, None, None], gidx, axis=4)
+        # Scores: (b, hk, g, nq, bs_q, chunk, bs_k).
+        s = jnp.einsum("bhgnqd,bhgnckd->bhgnqck", qb, k_c.astype(jnp.float32))
+        # Token-level causal mask (exact on diagonal blocks) + slot validity.
+        k_pos = idx_c[..., None] * bs + jnp.arange(bs)  # (b,hk,g,nq,chunk,bs)
+        keep = k_pos[..., None, :, :] <= q_pos[None, None, None, :, :, None, None]
+        keep = keep & msk_c[..., None, :, None]
+        s = jnp.where(keep, s, NEG_INF)
+        # Online softmax update.
+        s_max = s.max(axis=(-1, -2))                      # (b,hk,g,nq,bs_q)
+        m_new = jnp.maximum(m, s_max)
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None, None])
+        p = jnp.where(keep, p, 0.0)
+        l_new = l * corr + p.sum(axis=(-1, -2))
+        pv = jnp.einsum("bhgnqck,bhgnckd->bhgnqd", p, v_c.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hk, group, nq, bs, dv), jnp.float32)
+    m0 = jnp.full((b, hk, group, nq, bs), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, group, nq, bs), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def select_for(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: StemConfig,
+    *,
+    with_block_mask: bool = True,
+) -> tuple[selection_lib.BlockSelection, int]:
+    """Phase 1: metric + schedule + Top-k(i) selection."""
+    sq, sk = q.shape[2], k.shape[2]
+    m = metric_lib.oam_metric(q, k, v, cfg)
+    group = q.shape[1] // k.shape[1]
+    m = metric_lib.group_reduce_metric(m, group, cfg.group_reduce)
+    budgets = schedule_lib.schedule_for(cfg, sq, sk)
+    k_max = int(budgets.max())
+    sel = selection_lib.select_blocks(
+        m,
+        schedule_lib.budgets_as_jax(budgets),
+        k_max,
+        sink_blocks=cfg.sink_blocks,
+        local_blocks=cfg.local_blocks,
+        with_block_mask=with_block_mask,
+    )
+    return sel, k_max
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "return_stats"))
+def stem_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: StemConfig,
+    return_stats: bool = False,
+):
+    """Stem sparse causal attention (Algorithm 1).
+
+    Args:
+      q: (batch, q_heads, seq, head_dim)
+      k, v: (batch, kv_heads, seq, head_dim)
+      cfg: StemConfig.
+      return_stats: also return StemStats.
+
+    Returns:
+      (batch, q_heads, seq, head_dim) attention output [, StemStats].
+    """
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    scale = d ** -0.5
+    nk = sk // cfg.block_size
+    need_mask = cfg.backend == "dense" or return_stats
+    sel, k_max = select_for(q, k, v, cfg, with_block_mask=need_mask)
+
+    if cfg.backend == "dense":
+        token_mask = selection_lib.block_mask_to_token_mask(
+            sel.block_mask, cfg.block_size, cfg.block_size, sq, sk
+        )
+        out = dense_attention(q, k, v, causal=True, scale=scale, mask=token_mask)
+    elif cfg.backend == "xla":
+        out = _gather_executor(
+            q, k, v, sel.indices, sel.slot_mask,
+            block_size=cfg.block_size, scale=scale, slot_chunk=cfg.slot_chunk,
+        )
+    elif cfg.backend == "pallas":
+        from repro.kernels import ops as kernel_ops  # deferred: optional dep
+
+        out = kernel_ops.block_sparse_attention(
+            q, k, v, sel.indices, sel.slot_mask,
+            block_size=cfg.block_size, scale=scale,
+        )
+    else:  # pragma: no cover - config validates
+        raise ValueError(cfg.backend)
+
+    if return_stats:
+        stats = StemStats(
+            density=selection_lib.selection_density(sel, nk),
+            avg_budget_blocks=sel.budgets.mean(),
+            k_max=k_max,
+        )
+        return out, stats
+    return out

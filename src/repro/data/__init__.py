@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, make_global_batch
+
+__all__ = ["SyntheticLMData", "make_global_batch"]

@@ -1,0 +1,38 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU fleet these dispatch to compiled Mosaic kernels
+(``interpret=False``); in this CPU container they default to interpret mode,
+which executes the identical kernel body in Python and is what the
+per-kernel allclose tests sweep against ``ref.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import block_sparse_attn as _bsa
+from repro.kernels import flash_attention as _fa
+from repro.kernels import stem_metric as _sm
+
+# Flip to False on real TPU hardware (launch scripts do this via env).
+INTERPRET = True
+
+
+def flash_attention(q, k, v, *, block_q=128, block_k=128, scale=None):
+    return _fa.flash_attention(
+        q, k, v, block_q=block_q, block_k=block_k, scale=scale, interpret=INTERPRET
+    )
+
+
+def block_sparse_attention(q, k, v, indices, slot_mask, *, block_size=128, scale=None):
+    return _bsa.block_sparse_attention(
+        q, k, v, indices, slot_mask,
+        block_size=block_size, scale=scale, interpret=INTERPRET,
+    )
+
+
+def antidiag_pool(x, *, block_size=128, stride=16):
+    return _sm.antidiag_pool(x, block_size=block_size, stride=stride, interpret=INTERPRET)
+
+
+def value_magnitude(v, *, block_size=128):
+    return _sm.value_magnitude(v, block_size=block_size, interpret=INTERPRET)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification the kernels are tested
+against (tests/test_kernels_*.py sweep shapes/dtypes and assert_allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, scale: float | None = None
+) -> jnp.ndarray:
+    """Dense causal attention oracle (GQA-aware). q: (b,hq,n,d), k/v: (b,hk,n,d)."""
+    b, hq, n, d = q.shape
+    hk = k.shape[1]
+    group = hq // hk
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hk, group, n, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    qi = jnp.arange(n)[:, None]
+    kj = jnp.arange(n)[None, :]
+    s = jnp.where(kj <= qi, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, n, d).astype(q.dtype)
+
+
+def block_sparse_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    indices: jnp.ndarray,
+    slot_mask: jnp.ndarray,
+    *,
+    block_size: int,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Oracle for the Stem block-sparse kernel.
+
+    q: (b,hq,n,d); k,v: (b,hk,n,d); indices/slot_mask: (b,hq,nq,k_max).
+    Builds the dense token mask implied by the selection and runs masked
+    softmax attention.
+    """
+    b, hq, n, d = q.shape
+    hk = k.shape[1]
+    group = hq // hk
+    nq = n // block_size
+    nk = k.shape[2] // block_size
+    scale = (d ** -0.5) if scale is None else scale
+
+    onehot = jax.nn.one_hot(indices, nk, dtype=jnp.bool_)
+    block_mask = jnp.any(onehot & slot_mask[..., None], axis=-2)  # (b,hq,nq,nk)
+    tok = jnp.repeat(jnp.repeat(block_mask, block_size, axis=-2), block_size, axis=-1)
+    qi = jnp.arange(n)[:, None]
+    kj = jnp.arange(k.shape[2])[None, :]
+    tok = tok & (kj <= qi + (k.shape[2] - n))
+
+    qg = q.reshape(b, hk, group, n, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    s = jnp.where(tok.reshape(b, hk, group, n, k.shape[2]), s, NEG_INF)
+    row_live = s.max(axis=-1, keepdims=True) > NEG_INF / 2
+    p = jax.nn.softmax(jnp.where(row_live, s, 0.0), axis=-1)
+    p = jnp.where(row_live, p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, n, d).astype(q.dtype)
+
+
+def antidiag_pool_ref(x: jnp.ndarray, block_size: int, stride: int) -> jnp.ndarray:
+    """Oracle for the pooling kernel: (..., n, d) -> (..., nb, stride, d)."""
+    *lead, n, d = x.shape
+    nb = n // block_size
+    xb = x.reshape(*lead, nb, block_size // stride, stride, d)
+    return xb.astype(jnp.float32).mean(axis=-3)
+
+
+def value_magnitude_ref(v: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Oracle for block max-pooled log ||V||_2: (..., n, d) -> (..., nb)."""
+    *lead, n, d = v.shape
+    nb = n // block_size
+    norms = jnp.linalg.norm(v.astype(jnp.float32), axis=-1)
+    return jnp.log(jnp.maximum(norms, 1e-20)).reshape(*lead, nb, block_size).max(axis=-1)

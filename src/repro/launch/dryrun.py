@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod) on
+     512 placeholder host devices,
+  2. lowers the right step (train_step / prefill_step / serve_step) from
+     ShapeDtypeStructs — parameters, optimizer state and KV caches are all
+     abstract; nothing is allocated,
+  3. compiles, prints memory_analysis() (proves the cell fits) and
+     cost_analysis() (FLOPs/bytes for the roofline),
+  4. parses the compiled HLO for collective ops and estimates per-chip
+     collective bytes (ring/all-to-all models),
+  5. writes a JSON record consumed by benchmarks/roofline.py and
+     EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, optim
+from repro.launch import hlo_analysis
+from repro.sharding import context as sharding_context
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.models import registry
+from repro.sharding import rules as rules_lib
+
+# TPU v5e-class hardware constants (per chip) — the roofline denominators.
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\(?[a-z0-9\[\],\s]+\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-chip collective traffic estimate from the (SPMD, per-device) HLO.
+
+    Ring models: all-reduce moves ~2x the tensor, all-gather/reduce-scatter
+    ~1x the (large) tensor, all-to-all ~1x, collective-permute 1x.  The
+    (n-1)/n factor is dropped (<7% at n >= 16).
+    """
+    counts: dict[str, int] = {}
+    bytes_by: dict[str, float] = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:          # async pairs: count the -start only
+            continue
+        b = _shape_bytes(type_str)
+        mult = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}[op]
+        counts[op] = counts.get(op, 0) + 1
+        bytes_by[op] = bytes_by.get(op, 0.0) + b * mult
+    return {"counts": counts, "bytes_by_op": bytes_by,
+            "total_bytes": sum(bytes_by.values())}
+
+
+def _cell_step_and_args(arch: str, shape_name: str, mesh):
+    cfg = configs.get_config(arch)
+    shape = {s.name: s for s in configs.ALL_SHAPES}[shape_name]
+    bundle = registry.build(cfg)
+    abstract_values, axes_tree = bundle.abstract_params()
+    param_sh = rules_lib.param_shardings(cfg, mesh, abstract_values, axes_tree)
+    in_specs = registry.input_specs(cfg, shape)
+    batch_sh = rules_lib.batch_sharding(cfg, mesh, in_specs)
+    stem_cfg = steps_lib.default_stem_cfg(cfg)
+
+    if shape.kind == "train":
+        opt_cfg = optim.AdamWConfig(
+            moment_dtype="bfloat16" if cfg.fsdp_weights else "float32")
+        state_sh = steps_lib.opt_state_shardings(cfg, mesh, param_sh, abstract_values)
+        step = steps_lib.make_train_step(bundle, opt_cfg, stem_cfg=None, remat=True,
+                                         microbatches=cfg.train_microbatches,
+                                         grad_shardings=state_sh.master)
+        state = steps_lib.abstract_opt_state(abstract_values, opt_cfg)
+        return step, (state, in_specs), (state_sh, batch_sh), (0,), None
+    # Serving cells must pin OUTPUT shardings too: with unspecified
+    # out_shardings GSPMD may replicate the returned KV caches (observed:
+    # 429 GB/device for qwen1.5 whose 20 kv heads defeat propagation).
+    from jax.sharding import NamedSharding
+    rules = rules_lib.logical_rules(cfg, mesh)
+    logits_sh = NamedSharding(mesh, rules_lib.spec_for(
+        (shape.global_batch, cfg.padded_vocab), ("batch", "vocab"), rules, mesh))
+    caches = registry.abstract_caches(cfg, shape)
+    cache_sh = rules_lib.cache_shardings(cfg, mesh, caches)
+    if shape.kind == "prefill":
+        step = steps_lib.make_prefill_step(bundle, max_len=shape.seq_len,
+                                           stem_cfg=stem_cfg)
+        return step, (abstract_values, in_specs), (param_sh, batch_sh), (), \
+            (logits_sh, cache_sh)
+    step = steps_lib.make_serve_step(bundle)
+    return step, (abstract_values, in_specs["tokens"], caches), \
+        (param_sh, batch_sh["tokens"], cache_sh), (2,), (logits_sh, cache_sh)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": f"{'x'.join(str(s) for s in mesh.devices.shape)}",
+                 "chips": int(n_chips), "multi_pod": multi_pod}
+    t0 = time.time()
+    step, args, shardings, donate, out_sh = _cell_step_and_args(arch, shape_name, mesh)
+    cfg0 = configs.get_config(arch)
+    with mesh, sharding_context.use(cfg0, mesh):
+        # Donation mirrors the real drivers (train donates the opt state,
+        # serve donates the caches) — memory_analysis reflects steady state.
+        kw = {} if out_sh is None else {"out_shardings": out_sh}
+        jitted = jax.jit(step, in_shardings=shardings, donate_argnums=donate, **kw)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(mem, "temp_size_in_bytes", 0))
+                + int(getattr(mem, "argument_size_in_bytes", 0)),
+            }
+        except Exception as e:   # CPU backend may not implement it
+            rec["memory"] = {"error": str(e)}
+
+        # XLA's own cost_analysis counts while bodies once — recorded for
+        # reference; the roofline uses the loop-aware structural analyzer.
+        try:
+            cost = compiled.cost_analysis()
+            cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+            rec["xla_cost_flops_loopbody_once"] = float(cost.get("flops", 0.0))
+        except Exception as e:
+            rec["cost_error"] = str(e)
+
+        hlo = compiled.as_text()
+        c = hlo_analysis.analyze_hlo(hlo)
+        rec["flops_per_device"] = c.flops
+        # bytes_min = fusion-ideal (TPU epilogue fusion) traffic; the
+        # no-fusion CPU-HLO upper bound is recorded alongside.  The
+        # roofline memory term uses the fusion-ideal number (documented in
+        # EXPERIMENTS.md section Roofline).
+        rec["bytes_per_device"] = c.bytes_min
+        rec["bytes_per_device_nofusion"] = c.bytes
+        rec["flops_by_op"] = c.flops_by_op
+        rec["collectives"] = {"counts": c.coll_counts, "bytes_by_op": c.coll_by_op,
+                              "total_bytes": c.coll_bytes}
+        rec["hlo_bytes"] = len(hlo)
+
+    # Roofline terms (per chip; cost_analysis is the per-device SPMD program).
+    coll = rec["collectives"]["total_bytes"]
+    rec["roofline"] = {
+        "compute_s": rec["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": rec["bytes_per_device"] / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    terms = rec["roofline"]
+    rec["roofline"]["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+
+    # MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); decode D = batch tokens.
+    cfg = configs.get_config(arch)
+    shape = {s.name: s for s in configs.ALL_SHAPES}[shape_name]
+    total_p, active_p = registry.param_counts(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.kind]
+    model_flops = mult * active_p * tokens
+    rec["model_flops_total"] = model_flops
+    hlo_total = rec["flops_per_device"] * n_chips
+    rec["model_flops_ratio"] = model_flops / hlo_total if hlo_total else 0.0
+    return rec
+
+
+def cells(arch_filter: str):
+    for name in sorted(configs.ASSIGNED):
+        if arch_filter not in ("all", name):
+            continue
+        cfg = configs.get_config(name)
+        for shape in configs.shapes_for(cfg):
+            yield name, shape.name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells(args.arch):
+        if args.shape not in ("all", shape):
+            continue
+        tag = f"{arch}__{shape}__{'multipod' if args.multi_pod else 'pod'}"
+        out_path = os.path.join(args.out, tag + ".json")
+        print(f"=== {tag} ===", flush=True)
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod)
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+            r = rec["roofline"]
+            print(f"  compile={rec['compile_s']}s flops/dev={rec['flops_per_device']:.3e}"
+                  f" bytes/dev={rec['bytes_per_device']:.3e}"
+                  f" coll={rec['collectives']['total_bytes']:.3e}B"
+                  f" bottleneck={r['bottleneck']}", flush=True)
+            if "peak_bytes" in rec.get("memory", {}):
+                print(f"  memory: {json.dumps(rec['memory'])}", flush=True)
+        except Exception as e:
+            failures.append((tag, str(e)))
+            with open(out_path + ".err", "w") as f:
+                f.write(traceback.format_exc())
+            print(f"  FAILED: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nall cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

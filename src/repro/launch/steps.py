@@ -1,0 +1,127 @@
+"""jit-able step functions (train / prefill / serve) + their shardings.
+
+The same builders serve the real drivers (train.py, serve.py) and the
+multi-pod dry-run (dryrun.py lowers them from ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchConfig, RunShape
+from repro.core.config import StemConfig
+from repro.models import registry
+from repro.sharding import rules as rules_lib
+
+PAPER_STEM = StemConfig()   # paper defaults: B=128, mu=0.7, beta=0.2, floor 54
+
+
+def default_stem_cfg(cfg: ArchConfig) -> Optional[StemConfig]:
+    return PAPER_STEM if cfg.use_stem else None
+
+
+def make_train_step(bundle: registry.ModelBundle, opt_cfg: optim.AdamWConfig,
+                    *, stem_cfg: Optional[StemConfig] = None,
+                    remat: bool = True, microbatches: int = 1,
+                    grad_shardings=None):
+    """(opt_state, batch) -> (opt_state, metrics).
+
+    Forward in the arch dtype from the fp32 master, optional gradient
+    accumulation over ``microbatches``, bf16 gradient compression before the
+    data-parallel all-reduce, AdamW on the master.  ``grad_shardings``
+    (usually the ZeRO-1 master shardings) pins gradients to the optimizer
+    shard so the DP reduction lowers to a reduce-scatter instead of a full
+    all-reduce + replicated accumulator.
+    """
+    cfg = bundle.cfg
+
+    def pin(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def loss_of(master, mb):
+        params = jax.tree.map(lambda m: m.astype(cfg.jnp_dtype), master)
+        loss, metrics = bundle.loss_fn(params, mb, stem_cfg=stem_cfg, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(opt_state: optim.OptState, batch: dict):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(opt_state.master, batch)
+            grads = pin(grads)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(opt_state.master, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, pin(g))
+                return (pin(g_acc), l_acc + l), m
+
+            g0 = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  opt_state.master))
+            (grads, loss), ms = jax.lax.scan(acc_body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        grads = optim.adamw.compress_grads(grads, opt_cfg)
+        new_state, opt_metrics = optim.update(grads, opt_state, opt_cfg)
+        return new_state, {**metrics, **opt_metrics, "loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(bundle: registry.ModelBundle, *, max_len: int,
+                      stem_cfg: Optional[StemConfig] = None):
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch, max_len=max_len, stem_cfg=stem_cfg)
+    return prefill_step
+
+
+def make_serve_step(bundle: registry.ModelBundle):
+    def serve_step(params, tokens, caches):
+        return bundle.decode_step(params, tokens, caches)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings for the step arguments
+# ---------------------------------------------------------------------------
+
+def opt_state_shardings(cfg: ArchConfig, mesh, param_sh, abstract_values=None):
+    """OptState sharded like the parameters, plus ZeRO-1 sharding over the
+    `pod` axis when one exists (abstract_values supplies shapes)."""
+    rep = NamedSharding(mesh, P())
+    opt_sh = param_sh
+    if abstract_values is not None:
+        opt_sh = rules_lib.zero1_shardings(cfg, mesh, abstract_values, param_sh)
+    return optim.OptState(step=rep, master=opt_sh, mu=opt_sh, nu=opt_sh)
+
+
+def train_arg_shardings(cfg: ArchConfig, mesh, abstract_values, axes_tree,
+                        batch_specs):
+    param_sh = rules_lib.param_shardings(cfg, mesh, abstract_values, axes_tree)
+    state_sh = opt_state_shardings(cfg, mesh, param_sh)
+    batch_sh = rules_lib.batch_sharding(cfg, mesh, batch_specs)
+    return state_sh, batch_sh
+
+
+def abstract_opt_state(abstract_values, opt_cfg: Optional[optim.AdamWConfig] = None):
+    mdt = jnp.bfloat16 if (opt_cfg and opt_cfg.moment_dtype == "bfloat16") else jnp.float32
+    f32 = lambda v: jax.ShapeDtypeStruct(v.shape, jnp.float32)
+    mom = lambda v: jax.ShapeDtypeStruct(v.shape, mdt)
+    return optim.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        master=jax.tree.map(f32, abstract_values),
+        mu=jax.tree.map(mom, abstract_values),
+        nu=jax.tree.map(mom, abstract_values),
+    )

@@ -1,0 +1,243 @@
+"""Multi-head / grouped-query attention layer with pluggable sparse backend.
+
+Modes:
+  * ``full``   — training / prefill over a whole sequence.  Dense flash-style
+    attention by default; when a ``StemConfig`` is supplied and the layer is
+    causal self-attention, the Stem sparse path (core/) is used — this is the
+    paper's technique as a first-class integration point.
+  * ``decode`` — one new token against a KV cache (global or ring/windowed).
+  * ``cross``  — encoder-decoder cross attention (whisper).
+
+Local (windowed) attention runs as a chunked band so FLOPs scale with
+N * window rather than N^2 — required for recurrentgemma's 500k decode cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.config import StemConfig
+from repro.core.sparse_attention import (dense_attention, dense_attention_auto,
+                                          stem_attention)
+from repro.models import common
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (b, hk, L, dh)
+    v: jnp.ndarray
+    pos: jnp.ndarray      # scalar int32 — next write position
+
+
+def init(ini: common.Initializer, cfg: ArchConfig) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": ini.normal((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ini.normal((d, hk, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ini.normal((d, hk, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ini.normal((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ini.zeros((h, dh), ("heads", "head_dim"))
+        p["bk"] = ini.zeros((hk, dh), ("kv_heads", "head_dim"))
+        p["bv"] = ini.zeros((hk, dh), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p["q_norm"] = ini.zeros((dh,), ("head_dim",))
+        p["k_norm"] = ini.zeros((dh,), ("head_dim",))
+    return p
+
+
+def _project(params, x, cfg: ArchConfig, positions, *, use_rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"][None, :, None, :]
+        k = k + params["bk"][None, :, None, :]
+        v = v + params["bv"][None, :, None, :]
+    if cfg.qk_norm:
+        q = common.rms_norm(q, params["q_norm"])
+        k = common.rms_norm(k, params["k_norm"])
+    if use_rope:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def local_attention(q, k, v, window: int):
+    """Banded sliding-window attention, chunked so cost is O(N * 2w).
+
+    q, k, v: (b, h, n, d) with n % window == 0 (configs guarantee this).
+    Each query chunk of length w attends to its own and the previous chunk
+    with an exact |i-j| < w mask.
+    """
+    b, h, n, d = q.shape
+    w = window
+    if n <= w:
+        return _masked_window_dense(q, k, v, w)
+    n_orig = n
+    if n % w:
+        # pad to a window multiple; padded queries are sliced off and padded
+        # keys sit strictly in the future of every real query (causal band).
+        pad = w - n % w
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        n = n + pad
+    nc = n // w
+    qc = q.reshape(b, h, nc, w, d)
+    kc = k.reshape(b, h, nc, w, d)
+    vc = v.reshape(b, h, nc, w, d)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :, :1]), kc[:, :, :-1]], axis=2)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :, :1]), vc[:, :, :-1]], axis=2)
+    kk = jnp.concatenate([k_prev, kc], axis=3)          # (b,h,nc,2w,d)
+    vv = jnp.concatenate([v_prev, vc], axis=3)
+    s = jnp.einsum("bhcqd,bhckd->bhcqk", qc.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * (d ** -0.5)
+    qi = jnp.arange(w)[:, None] + w                     # position within 2w band
+    kj = jnp.arange(2 * w)[None, :]
+    mask = (kj <= qi) & (kj > qi - w)
+    first_chunk = jnp.arange(nc)[:, None, None] == 0
+    valid = jnp.where(first_chunk, mask & (kj >= w), mask)
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhcqk,bhckd->bhcqd", p, vv.astype(jnp.float32))
+    return o.reshape(b, h, n, d)[:, :, :n_orig].astype(q.dtype)
+
+
+def _masked_window_dense(q, k, v, window: int):
+    n = q.shape[2]
+    qi = jnp.arange(n)[:, None]
+    kj = jnp.arange(n)[None, :]
+    mask = (kj <= qi) & (kj > qi - window)
+    b, hq = q.shape[0], q.shape[1]
+    return dense_attention(q, k, v, causal=True,
+                           mask=jnp.broadcast_to(mask, (b, hq, n, n)))
+
+
+def apply_full(
+    params,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    positions: jnp.ndarray,
+    stem_cfg: Optional[StemConfig] = None,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Training / prefill attention over the full sequence."""
+    q, k, v = _project(params, x, cfg, positions, use_rope=use_rope)
+    if window is not None:
+        group = q.shape[1] // k.shape[1]
+        o = local_attention(q, jnp.repeat(k, group, axis=1), jnp.repeat(v, group, axis=1), window)
+    elif stem_cfg is not None and causal and x.shape[1] % stem_cfg.block_size == 0 \
+            and x.shape[1] // stem_cfg.block_size >= 2:
+        o = stem_attention(q, k, v, stem_cfg)
+    else:
+        o = dense_attention_auto(q, k, v, causal=causal)
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+
+def apply_decode(
+    params,
+    x: jnp.ndarray,                  # (b, 1, d) — one new token
+    cfg: ArchConfig,
+    cache: KVCache,
+    *,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+) -> tuple[jnp.ndarray, KVCache]:
+    """One decode step against the cache (ring buffer when windowed)."""
+    pos = cache.pos
+    q, k_new, v_new = _project(params, x, cfg, pos[None], use_rope=use_rope)
+    L = cache.k.shape[2]
+    if window is None:
+        ck, cv = common.update_cache(cache.k, cache.v, pos, k_new, v_new)
+        valid = jnp.arange(L) <= pos                      # (L,)
+    else:
+        ck, cv = common.update_ring_cache(cache.k, cache.v, pos, k_new, v_new, L)
+        slot_age = pos - ((pos - jnp.arange(L)) % L)      # wrote-at position per slot
+        valid = (slot_age >= 0) & (slot_age > pos - L)
+    b, h = q.shape[0], q.shape[1]
+    hk = ck.shape[1]
+    group = h // hk
+    s = jnp.einsum("bhgd,bhkd->bhgk",
+                   q[:, :, 0].reshape(b, hk, group, -1).astype(jnp.float32),
+                   ck.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, cv.astype(jnp.float32))
+    o = o.reshape(b, h, 1, cfg.head_dim).astype(x.dtype)
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+    return out, KVCache(k=ck, v=cv, pos=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross(ini: common.Initializer, cfg: ArchConfig) -> dict:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq": ini.normal((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ini.normal((d, h, dh), ("embed", "heads", "head_dim")),
+        "wv": ini.normal((d, h, dh), ("embed", "heads", "head_dim")),
+        "wo": ini.normal((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def cross_kv(params, enc_out: jnp.ndarray):
+    """Precompute cross-attention K/V from encoder output (b, F, d)."""
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wv"])
+    return k, v
+
+
+def apply_cross(params, x: jnp.ndarray, ck: jnp.ndarray, cv: jnp.ndarray,
+                head_dim: int) -> jnp.ndarray:
+    """Bidirectional cross attention: decoder x attends encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    o = dense_attention_auto(q, ck, cv, causal=False, scale=head_dim ** -0.5)
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               window: Optional[int] = None, dtype=jnp.bfloat16) -> KVCache:
+    L = min(max_len, window) if window else max_len
+    shape = (batch, cfg.num_kv_heads, L, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def prefill_into_cache(
+    params, x, cfg: ArchConfig, *, positions, max_len: int,
+    stem_cfg: Optional[StemConfig] = None, window: Optional[int] = None,
+    use_rope: bool = True,
+):
+    """Prefill attention AND return the populated cache for decode."""
+    q, k, v = _project(params, x, cfg, positions, use_rope=use_rope)
+    if window is not None:
+        group = q.shape[1] // k.shape[1]
+        o = local_attention(q, jnp.repeat(k, group, axis=1), jnp.repeat(v, group, axis=1), window)
+        L = min(max_len, window)
+        # Keep the trailing `window` keys, aligned to their ring slots
+        # (position p lives at slot p % L).
+        n = x.shape[1]
+        ck = jnp.roll(k[:, :, -L:], shift=(n % L), axis=2)
+        cv = jnp.roll(v[:, :, -L:], shift=(n % L), axis=2)
+    else:
+        if stem_cfg is not None and x.shape[1] % stem_cfg.block_size == 0 \
+                and x.shape[1] // stem_cfg.block_size >= 2:
+            o = stem_attention(q, k, v, stem_cfg)
+        else:
+            o = dense_attention_auto(q, k, v, causal=True)
+        L = max_len
+        pad = L - k.shape[2]
+        ck = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+    cache = KVCache(k=ck, v=cv, pos=jnp.asarray(x.shape[1], jnp.int32))
+    return out, cache

@@ -1,0 +1,201 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the brief: ``input_specs()`` supplies
+precomputed frame embeddings (batch, frames, d_model).  The encoder is
+bidirectional self-attention (+ sinusoidal positions); the decoder is a
+causal LM with cross-attention (+ learned positions).  Stem applies to the
+decoder *self*-attention prefill only (DESIGN.md §5): the encoder has no
+causal information-flow asymmetry, and cross-attention sees a fixed small
+source.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.config import StemConfig
+from repro.models import attention, common, mlp
+
+
+class DecLayerCache(NamedTuple):
+    self_cache: attention.KVCache
+    cross_k: jnp.ndarray
+    cross_v: jnp.ndarray
+
+
+def _init_enc_layer(ini, cfg: ArchConfig) -> dict:
+    return {
+        "norm1": ini.zeros((cfg.d_model,), ("embed",)),
+        "attn": attention.init(ini, cfg),
+        "norm2": ini.zeros((cfg.d_model,), ("embed",)),
+        "ffn": mlp.init(ini, cfg.d_model, cfg.d_ff, "gelu_mlp"),
+    }
+
+
+def _init_dec_layer(ini, cfg: ArchConfig) -> dict:
+    return {
+        "norm1": ini.zeros((cfg.d_model,), ("embed",)),
+        "self_attn": attention.init(ini, cfg),
+        "norm2": ini.zeros((cfg.d_model,), ("embed",)),
+        "cross_attn": attention.init_cross(ini, cfg),
+        "norm3": ini.zeros((cfg.d_model,), ("embed",)),
+        "ffn": mlp.init(ini, cfg.d_model, cfg.d_ff, "gelu_mlp"),
+    }
+
+
+def _stack(ini, init_one, n):
+    def one(key):
+        sub = common.Initializer(key, ini.dtype)
+        return common.unzip(init_one(sub))[0]
+    keys = jax.random.split(ini.next_key(), n)
+    values = jax.vmap(one)(keys)
+    _, axes = common.unzip(init_one(common.Initializer(jax.random.PRNGKey(0), ini.dtype)))
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return common.zip_trees(values, axes)
+
+
+def init_encdec(key: jax.Array, cfg: ArchConfig) -> dict:
+    ini = common.Initializer(key, cfg.jnp_dtype)
+    max_dec_pos = 65536   # learned decoder positions table
+    return {
+        "embed": common.embed_init(ini, cfg.padded_vocab, cfg.d_model),
+        "dec_pos": ini.normal((max_dec_pos, cfg.d_model), (None, "embed"), scale=0.01),
+        "enc_layers": _stack(ini, lambda i: _init_enc_layer(i, cfg), cfg.encdec.encoder_layers),
+        "enc_norm": ini.zeros((cfg.d_model,), ("embed",)),
+        "dec_layers": _stack(ini, lambda i: _init_dec_layer(i, cfg), cfg.num_layers),
+        "final_norm": ini.zeros((cfg.d_model,), ("embed",)),
+    }
+
+
+def init_params(key, cfg):
+    return common.unzip(init_encdec(key, cfg))[0]
+
+
+def abstract_params(cfg: ArchConfig):
+    captured = {}
+
+    def f(key):
+        values, axes = common.unzip(init_encdec(key, cfg))
+        captured["axes"] = axes
+        return values
+
+    values = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return values, captured["axes"]
+
+
+def encode(params, frames: jnp.ndarray, cfg: ArchConfig, *, remat: bool = True):
+    """frames: (b, F, d) stub embeddings -> (b, F, d) encoder states."""
+    pos = common.sinusoidal_positions(frames.shape[1], cfg.d_model)
+    x = frames.astype(cfg.jnp_dtype) + pos.astype(cfg.jnp_dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, layer):
+        h = common.layer_norm_simple(x, layer["norm1"])
+        x = x + attention.apply_full(layer["attn"], h, cfg, positions=positions,
+                                     use_rope=False, causal=False)
+        h = common.layer_norm_simple(x, layer["norm2"])
+        x = x + mlp.apply(layer["ffn"], h, "gelu_mlp")
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return common.layer_norm_simple(x, params["enc_norm"])
+
+
+def _dec_embed(params, tokens, cfg: ArchConfig, start: int | jnp.ndarray = 0):
+    x = common.embed_lookup(params["embed"], tokens, cfg.jnp_dtype)
+    n = tokens.shape[1]
+    pos_tab = jax.lax.dynamic_slice_in_dim(params["dec_pos"], start, n, axis=0)
+    return x + pos_tab[None].astype(cfg.jnp_dtype)
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, *,
+            stem_cfg: Optional[StemConfig] = None, remat: bool = True):
+    """batch: frames (b,F,d), tokens (b,s), labels (b,s)."""
+    enc = encode(params, batch["frames"], cfg, remat=remat)
+    x = _dec_embed(params, batch["tokens"], cfg)
+    positions = jnp.arange(batch["tokens"].shape[1])
+
+    def body(x, layer):
+        h = common.layer_norm_simple(x, layer["norm1"])
+        x = x + attention.apply_full(layer["self_attn"], h, cfg,
+                                     positions=positions, stem_cfg=stem_cfg,
+                                     use_rope=False)
+        h = common.layer_norm_simple(x, layer["norm2"])
+        ck, cv = attention.cross_kv(layer["cross_attn"], enc)
+        x = x + attention.apply_cross(layer["cross_attn"], h, ck, cv, cfg.head_dim)
+        h = common.layer_norm_simple(x, layer["norm3"])
+        x = x + mlp.apply(layer["ffn"], h, "gelu_mlp")
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = common.layer_norm_simple(x, params["final_norm"])
+    logits = common.lm_logits(x, params["embed"])
+    ce = common.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "loss": ce}
+
+
+def prefill(params, batch: dict, cfg: ArchConfig, *, max_len: int,
+            stem_cfg: Optional[StemConfig] = None):
+    """Encode + run the decoder prompt; returns (logits, stacked caches)."""
+    enc = encode(params, batch["frames"], cfg, remat=False)
+    x = _dec_embed(params, batch["tokens"], cfg)
+    n = batch["tokens"].shape[1]
+    positions = jnp.arange(n)
+
+    def body(x, layer):
+        h = common.layer_norm_simple(x, layer["norm1"])
+        sa, cache = attention.prefill_into_cache(
+            layer["self_attn"], h, cfg, positions=positions, max_len=max_len,
+            stem_cfg=stem_cfg)
+        x = x + sa
+        h = common.layer_norm_simple(x, layer["norm2"])
+        ck, cv = attention.cross_kv(layer["cross_attn"], enc)
+        x = x + attention.apply_cross(layer["cross_attn"], h, ck, cv, cfg.head_dim)
+        h = common.layer_norm_simple(x, layer["norm3"])
+        x = x + mlp.apply(layer["ffn"], h, "gelu_mlp")
+        return x, DecLayerCache(self_cache=cache, cross_k=ck, cross_v=cv)
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    x = common.layer_norm_simple(x, params["final_norm"])
+    logits = common.lm_logits(x[:, -1:], params["embed"])[:, 0]
+    return logits, caches
+
+
+def decode_step(params, tokens: jnp.ndarray, caches, cfg: ArchConfig):
+    pos0 = caches.self_cache.pos[0]
+    x = _dec_embed(params, tokens, cfg, start=pos0)
+
+    def body(x, scanned):
+        layer, cache = scanned
+        h = common.layer_norm_simple(x, layer["norm1"])
+        sa, new_self = attention.apply_decode(layer["self_attn"], h, cfg,
+                                              cache.self_cache, use_rope=False)
+        x = x + sa
+        h = common.layer_norm_simple(x, layer["norm2"])
+        x = x + attention.apply_cross(layer["cross_attn"], h, cache.cross_k,
+                                      cache.cross_v, cfg.head_dim)
+        h = common.layer_norm_simple(x, layer["norm3"])
+        x = x + mlp.apply(layer["ffn"], h, "gelu_mlp")
+        return x, DecLayerCache(new_self, cache.cross_k, cache.cross_v)
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = common.layer_norm_simple(x, params["final_norm"])
+    logits = common.lm_logits(x, params["embed"])[:, 0]
+    return logits, new_caches
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, frames: int):
+    one = DecLayerCache(
+        self_cache=attention.init_cache(cfg, batch, max_len, dtype=cfg.jnp_dtype),
+        cross_k=jnp.zeros((batch, cfg.num_heads, frames, cfg.head_dim), cfg.jnp_dtype),
+        cross_v=jnp.zeros((batch, cfg.num_heads, frames, cfg.head_dim), cfg.jnp_dtype),
+    )
+    return jax.tree.map(lambda t: jnp.broadcast_to(t, (cfg.num_layers,) + t.shape), one)

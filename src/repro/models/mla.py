@@ -1,0 +1,138 @@
+"""Multi-head Latent Attention (DeepSeek-V3) with Stem integration.
+
+MLA compresses K/V into a small latent c_kv (512) plus a shared 64-dim
+rotary key.  The KV cache stores only (c_kv, k_rope) — that *is* the
+memory win — and queries use a low-rank down/up projection.
+
+Stem integration (paper §3, the DSA + Stem experiment): the TPD schedule
+wraps block selection over the expanded keys, and OAM's value-magnitude term
+uses ||c_j|| as the latent proxy for ||W_UV c_j|| (W_UV is shared across
+positions so rankings are preserved up to its spectrum — noted in
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.core.config import StemConfig
+from repro.core.sparse_attention import dense_attention_auto, stem_attention
+from repro.models import common
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray     # (b, L, kv_rank) compressed latents
+    k_rope: jnp.ndarray   # (b, L, rope_dim) shared rotary key
+    pos: jnp.ndarray
+
+
+def init(ini: common.Initializer, cfg: ArchConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dh_q = m.nope_head_dim + m.rope_head_dim
+    return {
+        "w_dq": ini.normal((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": ini.zeros((m.q_lora_rank,), ("q_lora",)),
+        "w_uq": ini.normal((m.q_lora_rank, h, dh_q), ("q_lora", "heads", "head_dim")),
+        "w_dkv": ini.normal((d, m.kv_lora_rank), ("embed", "kv_lora")),
+        "kv_norm": ini.zeros((m.kv_lora_rank,), ("kv_lora",)),
+        "w_uk": ini.normal((m.kv_lora_rank, h, m.nope_head_dim), ("kv_lora", "heads", "head_dim")),
+        "w_uv": ini.normal((m.kv_lora_rank, h, m.v_head_dim), ("kv_lora", "heads", "head_dim")),
+        "w_kr": ini.normal((d, m.rope_head_dim), ("embed", "head_dim")),
+        "wo": ini.normal((h, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _queries(params, x, cfg: ArchConfig, positions):
+    m = cfg.mla
+    cq = common.rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dq"]), params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bhsk", cq, params["w_uq"])
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(params, x, cfg: ArchConfig, positions):
+    m = cfg.mla
+    c = common.rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]), params["kv_norm"])
+    kr = jnp.einsum("bsd,dk->bsk", x, params["w_kr"])
+    kr = common.apply_rope(kr[:, None], positions, cfg.rope_theta)[:, 0]
+    return c, kr
+
+
+def _expand(params, c, kr, cfg: ArchConfig):
+    """Expand latents to per-head keys/values; concat the shared rope key."""
+    k_nope = jnp.einsum("bsr,rhk->bhsk", c, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bhsk", c, params["w_uv"])
+    kr_h = jnp.broadcast_to(kr[:, None], (kr.shape[0], cfg.num_heads) + kr.shape[1:])
+    k = jnp.concatenate([k_nope, kr_h], axis=-1)
+    return k, v
+
+
+def apply_full(
+    params, x, cfg: ArchConfig, *, positions,
+    stem_cfg: Optional[StemConfig] = None,
+) -> jnp.ndarray:
+    m = cfg.mla
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c, kr = _latents(params, x, cfg, positions)
+    k, v = _expand(params, c, kr, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    if stem_cfg is not None and x.shape[1] % stem_cfg.block_size == 0 \
+            and x.shape[1] // stem_cfg.block_size >= 2:
+        o = stem_attention(q, k, v, stem_cfg)
+    else:
+        o = dense_attention_auto(q, k, v, causal=True, scale=scale)
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill_into_cache(params, x, cfg: ArchConfig, *, positions, max_len: int,
+                       stem_cfg: Optional[StemConfig] = None):
+    out = apply_full(params, x, cfg, positions=positions, stem_cfg=stem_cfg)
+    c, kr = _latents(params, x, cfg, positions)
+    pad = max_len - x.shape[1]
+    cache = MLACache(
+        c_kv=jnp.pad(c, ((0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16),
+        k_rope=jnp.pad(kr, ((0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16),
+        pos=jnp.asarray(x.shape[1], jnp.int32),
+    )
+    return out, cache
+
+
+def apply_decode(params, x, cfg: ArchConfig, cache: MLACache):
+    """One decode step.  Latent cache only: expand per step."""
+    m = cfg.mla
+    pos = cache.pos
+    q_nope, q_rope = _queries(params, x, cfg, pos[None])
+    c_new, kr_new = _latents(params, x, cfg, pos[None])
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), pos, axis=1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), pos, axis=1)
+    L = ck.shape[1]
+    valid = jnp.arange(L) <= pos
+
+    # Absorbed attention: score = q_nope . (W_UK c) + q_rope . k_rope.
+    q_abs = jnp.einsum("bhsk,rhk->bhsr", q_nope, params["w_uk"])   # (b,h,1,r)
+    s = jnp.einsum("bhsr,blr->bhsl", q_abs.astype(jnp.float32), ck.astype(jnp.float32))
+    s = s + jnp.einsum("bhsk,blk->bhsl", q_rope.astype(jnp.float32), ckr.astype(jnp.float32))
+    s = s * ((m.nope_head_dim + m.rope_head_dim) ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhsl,blr->bhsr", p, ck.astype(jnp.float32))  # (b,h,1,r)
+    o = jnp.einsum("bhsr,rhk->bhsk", o_lat.astype(x.dtype), params["w_uv"])
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+    return out, MLACache(c_kv=ck, k_rope=ckr, pos=pos + 1)

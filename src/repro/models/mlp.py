@@ -1,0 +1,35 @@
+"""Feed-forward variants: SwiGLU (llama/qwen/glm), GeGLU (gemma/griffin),
+plain GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init(ini: common.Initializer, d_model: int, d_ff: int, activation: str) -> dict:
+    if activation in ("silu", "gelu"):        # gated: gate + up + down
+        return {
+            "w_gate": ini.normal((d_model, d_ff), ("embed", "mlp")),
+            "w_up": ini.normal((d_model, d_ff), ("embed", "mlp")),
+            "w_down": ini.normal((d_ff, d_model), ("mlp", "embed")),
+        }
+    if activation == "gelu_mlp":              # plain 2-layer MLP
+        return {
+            "w_in": ini.normal((d_model, d_ff), ("embed", "mlp")),
+            "b_in": ini.zeros((d_ff,), ("mlp",)),
+            "w_out": ini.normal((d_ff, d_model), ("mlp", "embed")),
+            "b_out": ini.zeros((d_model,), ("embed",)),
+        }
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def apply(params: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation in ("silu", "gelu"):
+        act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+        g = act(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+        return jnp.einsum("bsf,fd->bsd", g * u, params["w_down"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_in"]) + params["b_in"])
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"]) + params["b_out"]

@@ -1,0 +1,118 @@
+"""Unified model API over the arch families + abstract input specs.
+
+``build(cfg)`` returns a ``ModelBundle`` whose members are pure functions —
+the launch layer (train/serve/dryrun) composes them under pjit with the
+sharding rules.  ``input_specs`` yields ShapeDtypeStructs for every
+(arch x run-shape) cell so the multi-pod dry-run lowers without allocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunShape
+from repro.core.config import StemConfig
+from repro.models import encdec, transformer
+
+VLM_PATCH_FRACTION = 4   # 1/4 of the sequence is patch positions
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init_params: Callable[[jax.Array], Any]
+    abstract_params: Callable[[], tuple[Any, Any]]
+    loss_fn: Callable[..., tuple[jnp.ndarray, dict]]
+    prefill: Callable[..., tuple[jnp.ndarray, Any]]
+    decode_step: Callable[..., tuple[jnp.ndarray, Any]]
+    init_caches: Callable[..., Any]
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family == "encdec":
+        return ModelBundle(
+            cfg=cfg,
+            init_params=lambda key: encdec.init_params(key, cfg),
+            abstract_params=lambda: encdec.abstract_params(cfg),
+            loss_fn=lambda p, b, **kw: encdec.loss_fn(p, b, cfg, **kw),
+            prefill=lambda p, b, **kw: encdec.prefill(p, b, cfg, **kw),
+            decode_step=lambda p, t, c: encdec.decode_step(p, t, c, cfg),
+            init_caches=lambda batch, max_len: encdec.init_caches(
+                cfg, batch, max_len, cfg.encdec.encoder_frames),
+        )
+    return ModelBundle(
+        cfg=cfg,
+        init_params=lambda key: transformer.init_params(key, cfg),
+        abstract_params=lambda: transformer.abstract_params(cfg),
+        loss_fn=lambda p, b, **kw: transformer.loss_fn(p, b, cfg, **kw),
+        prefill=lambda p, b, **kw: transformer.prefill(p, b, cfg, **kw),
+        decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+        init_caches=lambda batch, max_len: transformer.init_caches(cfg, batch, max_len),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs per (arch x shape) cell
+# ---------------------------------------------------------------------------
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: RunShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct(
+                    (b, cfg.encdec.encoder_frames, cfg.d_model), jnp.bfloat16),
+                "tokens": _tok(b, s),
+                "labels": _tok(b, s),
+            }
+        if cfg.vlm_stub:
+            s_img = s // VLM_PATCH_FRACTION
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((b, s_img, cfg.d_model), jnp.bfloat16),
+                "tokens": _tok(b, s - s_img),
+                "labels": _tok(b, s - s_img),
+            }
+        return {"tokens": _tok(b, s), "labels": _tok(b, s)}
+    if shape.kind == "prefill":
+        spec = input_specs(cfg, dataclasses.replace(shape, kind="train"))
+        spec.pop("labels")
+        return spec
+    if shape.kind == "decode":
+        return {"tokens": _tok(b, 1)}
+    raise ValueError(shape.kind)
+
+
+def abstract_caches(cfg: ArchConfig, shape: RunShape):
+    """ShapeDtypeStructs for the serve-step KV caches of a decode cell."""
+    bundle = build(cfg)
+    return jax.eval_shape(
+        lambda: bundle.init_caches(shape.global_batch, shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (MODEL_FLOPS = 6 N D for the roofline)
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ArchConfig) -> tuple[float, float]:
+    """(total_params, active_params_per_token) from the abstract tree."""
+    bundle = build(cfg)
+    values, _ = bundle.abstract_params()
+    total = sum(math.prod(v.shape) for v in jax.tree.leaves(values))
+    active = total
+    if cfg.moe is not None:
+        e, k, f, d = (cfg.moe.num_experts, cfg.moe.top_k,
+                      cfg.moe.expert_d_ff, cfg.d_model)
+        n_moe_layers = cfg.num_layers - cfg.moe.first_k_dense
+        all_expert = n_moe_layers * e * 3 * d * f
+        active_expert = n_moe_layers * k * 3 * d * f
+        active = total - all_expert + active_expert
+    return float(total), float(active)

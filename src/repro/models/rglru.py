@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Hawk-style temporal-mixing block:
+  x -> {branch1: linear -> conv1d(w=4) -> RG-LRU, branch2: linear -> GeLU}
+  out = proj(branch1 * branch2)
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a x_t + b_a)                         (recurrence gate)
+  i_t = sigmoid(W_x x_t + b_x)                         (input gate)
+  log a_t = -c * softplus(Lambda) * r_t                (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over (a_t, b_t) pairs —
+O(N log N) depth, fully parallel across channels (sharded on `model`).
+Decode is the O(1) per-step recurrence with a carried state — this is what
+makes the 500k long-context decode cell sub-quadratic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RGLRUConfig
+from repro.models import common
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray           # (b, width) recurrent state
+    conv: jnp.ndarray        # (b, conv_width - 1, width) conv tail
+    pos: jnp.ndarray
+
+
+def init(ini: common.Initializer, cfg: ArchConfig) -> dict:
+    r: RGLRUConfig = cfg.rglru
+    d, w = cfg.d_model, r.lru_width
+    return {
+        "w_in": ini.normal((d, w), ("embed", "rnn")),
+        "w_gate_branch": ini.normal((d, w), ("embed", "rnn")),
+        "conv_w": ini.normal((r.conv_width, w), ("conv", "rnn"), scale=0.1),
+        "conv_b": ini.zeros((w,), ("rnn",)),
+        # Gate weights shard on the OUTPUT dim ("rnn_in" replicates): the
+        # contraction then consumes one shared all-gather of xc (bf16)
+        # instead of emitting two full psums per layer (§Perf
+        # recurrentgemma iteration 1).
+        "w_a": ini.normal((w, w), ("rnn_in", "rnn")),
+        "b_a": ini.zeros((w,), ("rnn",)),
+        "w_x": ini.normal((w, w), ("rnn_in", "rnn")),
+        "b_x": ini.zeros((w,), ("rnn",)),
+        # Lambda parameterized so a ~ U(0.9, 0.999) at init (paper appendix).
+        "lam": ini.value(jnp.linspace(2.0, 6.0, w, dtype=jnp.float32), ("rnn",)),
+        "w_out": ini.normal((w, d), ("rnn", "embed")),
+    }
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv along time: x (b, s, w); w (cw, w)."""
+    cw = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pads[:, i : i + x.shape[1], :] * w[i] for i in range(cw))
+    return out + b
+
+
+def _gates(params, xc: jnp.ndarray):
+    """Returns (log_a, b_t) of the linear recurrence h = a h + b."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wu->bsu", xc, params["w_a"]) + params["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wu->bsu", xc, params["w_x"]) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, b
+
+
+def apply_full(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Training/prefill over full sequence via associative scan."""
+    xb = jnp.einsum("bsd,dw->bsw", x, params["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"]))
+    xc = _conv1d(xb, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, xc)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    r = cfg.rglru
+    return RGLRUState(
+        h=jnp.zeros((batch, r.lru_width), jnp.float32),
+        conv=jnp.zeros((batch, r.conv_width - 1, r.lru_width), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill_into_state(params, x, cfg: ArchConfig):
+    """Full-sequence output + final recurrent state for decode."""
+    out = apply_full(params, x, cfg)
+    xb = jnp.einsum("bsd,dw->bsw", x, params["w_in"])
+    xc = _conv1d(xb, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, xc)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    cw = cfg.rglru.conv_width
+    state = RGLRUState(
+        h=h[:, -1].astype(jnp.float32),
+        conv=xb[:, -(cw - 1):].astype(x.dtype),
+        pos=jnp.asarray(x.shape[1], jnp.int32),
+    )
+    return out, state
+
+
+def apply_decode(params, x: jnp.ndarray, cfg: ArchConfig, state: RGLRUState):
+    """One step: x (b, 1, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, params["w_in"])[:, 0]      # (b, w)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"]))[:, 0]
+    # conv over [tail, new]
+    hist = jnp.concatenate([state.conv, xb[:, None]], axis=1)    # (b, cw, w)
+    w = params["conv_w"]
+    xc = (hist * w[None]).sum(axis=1) + params["conv_b"]
+    a, b = _gates(params, xc[:, None])
+    a, b = a[:, 0], b[:, 0]
+    h_new = a * state.h + b
+    y = (h_new.astype(x.dtype) * gate)[:, None]
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+    new_state = RGLRUState(h=h_new, conv=hist[:, 1:], pos=state.pos + 1)
+    return out, new_state

@@ -1,0 +1,199 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Selective state space with scalar-identity A per head:
+  h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t^T     (state: headdim x N)
+  y_t = C_t . h_t + D x_t
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+einsums *within* chunks (MXU-friendly (Q x Q) tiles) and a sequential
+``lax.scan`` over chunk states — O(N Q d) compute, O(N/Q) scan depth.
+Decode is the O(1) recurrence.  Heads shard on the `model` axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSDConfig
+from repro.models import common
+
+
+class SSDState(NamedTuple):
+    h: jnp.ndarray        # (b, heads, headdim, state) fp32
+    conv: jnp.ndarray     # (b, conv_width-1, conv_dim)
+    pos: jnp.ndarray
+
+
+def _dims(cfg: ArchConfig):
+    s: SSDConfig = cfg.ssd
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim     # x, B, C go through the conv
+    return s, d_inner, heads, conv_dim
+
+
+def init(ini: common.Initializer, cfg: ArchConfig) -> dict:
+    s, d_inner, heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "w_in": ini.normal((d, 2 * d_inner + 2 * s.state_dim + heads),
+                           ("embed", "rnn")),
+        "conv_w": ini.normal((s.conv_width, conv_dim), ("conv", "rnn"), scale=0.1),
+        "conv_b": ini.zeros((conv_dim,), ("rnn",)),
+        "a_log": ini.value(jnp.log(jnp.linspace(1.0, 16.0, heads)), ("heads",)),
+        "dt_bias": ini.value(jnp.log(jnp.expm1(jnp.full((heads,), 0.01))), ("heads",)),
+        "d_skip": ini.ones((heads,), ("heads",), dtype=jnp.float32),
+        "norm": ini.zeros((d_inner,), ("rnn",)),
+        "w_out": ini.normal((d_inner, d), ("rnn", "embed")),
+    }
+
+
+def _split_proj(params, x, cfg: ArchConfig):
+    s, d_inner, heads, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _conv_silu(xbc, params):
+    cw = params["conv_w"].shape[0]
+    pads = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pads[:, i : i + xbc.shape[1], :] * params["conv_w"][i] for i in range(cw))
+    return jax.nn.silu(out + params["conv_b"])
+
+
+def _ssm_inputs(xbc, dt, params, cfg: ArchConfig):
+    s, d_inner, heads, _ = _dims(cfg)
+    xi, B, C = jnp.split(xbc, [d_inner, d_inner + s.state_dim], axis=-1)
+    b, n = xi.shape[0], xi.shape[1]
+    xh = xi.reshape(b, n, heads, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])    # (b,n,h)
+    a = -jnp.exp(params["a_log"])                                        # (h,)
+    log_decay = dt * a                                                   # (b,n,h) <= 0
+    return xh, B, C, dt, log_decay
+
+
+def _chunked_ssd(xh, B, C, dt, log_decay, chunk: int, d_skip):
+    """Chunked SSD scan.  xh: (b,n,h,p); B,C: (b,n,N); dt,log_decay: (b,n,h)."""
+    b, n, h, p = xh.shape
+    N = B.shape[-1]
+    q = min(chunk, n)
+    n_orig = n
+    if n % q:
+        # pad to a chunk multiple: dt=0 at padding -> a=1, b=0, so the
+        # carried state is unaffected; padded outputs are sliced off.
+        pad = q - n % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+        n = n + pad
+    nc = n // q
+    xc = xh.reshape(b, nc, q, h, p).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, N).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    ld = log_decay.reshape(b, nc, q, h)
+    cum = jnp.cumsum(ld, axis=2)                                 # (b,nc,q,h)
+
+    # Intra-chunk (quadratic within chunk): L[i,j] = exp(cum_i - cum_j), j<=i.
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (b,nc,i,j,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # Mask *before* exp: li > 0 above the diagonal would overflow and poison
+    # gradients through the where.
+    li = jnp.where(mask[None, None, :, :, None], li, -jnp.inf)
+    L = jnp.exp(li)
+    cb = jnp.einsum("bciN,bcjN->bcij", Cc, Bc)                   # (b,nc,i,j)
+    w = cb[..., None] * L * dtc[:, :, None, :, :]                # (b,nc,i,j,h)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # Chunk-final states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T.
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (b,nc,q,h)
+    sB = Bc[..., None, :] * (dtc * decay_to_end)[..., None]      # (b,nc,q,h,N)
+    S_chunk = jnp.einsum("bcqhN,bcqhp->bchpN", sB, xc)           # (b,nc,h,p,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (b,nc,h)
+
+    # Sequential pass over chunks for the carried state.
+    def step(S_prev, inp):
+        S_c, dec = inp                                           # (b,h,p,N), (b,h)
+        S_new = S_prev * dec[..., None, None] + S_c
+        return S_new, S_prev
+
+    S0 = jnp.zeros((b, h, p, N), jnp.float32)
+    S_final, S_prevs = jax.lax.scan(
+        step,
+        S0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)                   # (b,nc,h,p,N)
+
+    # Inter-chunk: y_inter[i] = exp(cum_i) * C_i . S_prev.
+    decay_in = jnp.exp(cum)                                      # (b,nc,q,h)
+    y_inter = jnp.einsum("bciN,bchpN->bcihp", Cc, S_prevs) * decay_in[..., None]
+
+    y = (y_intra + y_inter).reshape(b, n, h, p)
+    y = y + d_skip[None, None, :, None] * xh.astype(jnp.float32)
+    return y[:, :n_orig], S_final
+
+
+def apply_full(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    out, _ = _forward(params, x, cfg)
+    return out
+
+
+def _forward(params, x, cfg: ArchConfig):
+    s, d_inner, heads, _ = _dims(cfg)
+    z, xbc, dt = _split_proj(params, x, cfg)
+    xbc = _conv_silu(xbc, params)
+    xh, B, C, dtv, ld = _ssm_inputs(xbc, dt, params, cfg)
+    y, S_final = _chunked_ssd(xh, B, C, dtv, ld, s.chunk_size, params["d_skip"])
+    b, n = x.shape[0], x.shape[1]
+    y = y.reshape(b, n, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = common.rms_norm(y, params["norm"])
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"]), S_final
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSDState:
+    s, d_inner, heads, conv_dim = _dims(cfg)
+    return SSDState(
+        h=jnp.zeros((batch, heads, s.head_dim, s.state_dim), jnp.float32),
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill_into_state(params, x, cfg: ArchConfig):
+    s, d_inner, heads, conv_dim = _dims(cfg)
+    out, S_final = _forward(params, x, cfg)
+    _, xbc_raw, _ = _split_proj(params, x, cfg)
+    cw = s.conv_width
+    state = SSDState(
+        h=S_final,
+        conv=xbc_raw[:, -(cw - 1):].astype(x.dtype),
+        pos=jnp.asarray(x.shape[1], jnp.int32),
+    )
+    return out, state
+
+
+def apply_decode(params, x: jnp.ndarray, cfg: ArchConfig, state: SSDState):
+    """One step recurrence.  x: (b, 1, d)."""
+    s, d_inner, heads, conv_dim = _dims(cfg)
+    z, xbc, dt = _split_proj(params, x, cfg)
+    hist = jnp.concatenate([state.conv, xbc], axis=1)            # (b,cw,conv_dim)
+    xbc_c = jax.nn.silu((hist * params["conv_w"][None]).sum(1) + params["conv_b"])
+    xh, B, C, dtv, ld = _ssm_inputs(xbc_c[:, None], dt, params, cfg)
+    a = jnp.exp(ld[:, 0])                                        # (b,h)
+    dbx = jnp.einsum("bh,bN,bhp->bhpN", dtv[:, 0], B[:, 0], xh[:, 0].astype(jnp.float32))
+    h_new = state.h * a[..., None, None] + dbx
+    y = jnp.einsum("bN,bhpN->bhp", C[:, 0].astype(jnp.float32), h_new)
+    y = y + params["d_skip"][None, :, None] * xh[:, 0].astype(jnp.float32)
+    b = x.shape[0]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = common.rms_norm(y, params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, SSDState(h=h_new, conv=hist[:, 1:], pos=state.pos + 1)

@@ -1,0 +1,440 @@
+"""Decoder-only LM assembly: layer programs, scan-over-layers, loss.
+
+A model is described by a **layer program** — a list of segments
+``(num_groups, kinds)`` where ``kinds`` is the tuple of sub-layer kinds in
+one group.  Homogeneous stacks compile as a single ``lax.scan`` over stacked
+parameters (small HLO, fast 512-way SPMD compiles); heterogeneous patterns
+(griffin's rec/rec/attn, deepseek's 3 dense + 58 MoE) become several
+segments.  Examples:
+
+  dense 28L:        [(28, ("dense",))]
+  deepseek 61L:     [(3, ("mla_dense",)), (58, ("mla_moe",))]
+  recurrentgemma:   [(8, ("rec", "rec", "dense_local")), (1, ("rec", "rec"))]
+  mamba2 48L:       [(48, ("ssd",))]
+
+Sub-layer kinds: dense | dense_local | moe | mla_dense | mla_moe | rec | ssd.
+Every kind supports three phases: full (train/prefill), prefill-with-cache,
+and decode-step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.config import StemConfig
+from repro.models import attention, common, mla, mlp, moe, rglru, ssd
+from repro.sharding.context import constrain
+
+
+# ---------------------------------------------------------------------------
+# Layer programs
+# ---------------------------------------------------------------------------
+
+def layer_program(cfg: ArchConfig) -> list[tuple[int, tuple[str, ...]]]:
+    if cfg.family == "ssm":
+        return [(cfg.num_layers, ("ssd",))]
+    if cfg.family == "hybrid":
+        period = cfg.rglru.attn_period
+        full = cfg.num_layers // period
+        rem = cfg.num_layers - full * period
+        group = ("rec",) * (period - 1) + ("dense_local",)
+        prog = [(full, group)]
+        if rem:
+            prog.append((1, ("rec",) * rem))
+        return prog
+    if cfg.family == "moe":
+        kind = "mla_moe" if cfg.mla else "moe"
+        first = cfg.moe.first_k_dense
+        prog = []
+        if first:
+            prog.append((first, ("mla_dense" if cfg.mla else "dense",)))
+        prog.append((cfg.num_layers - first, (kind,)))
+        return prog
+    # dense / vlm backbones
+    return [(cfg.num_layers, ("dense",))]
+
+
+# ---------------------------------------------------------------------------
+# Single sub-layer: init / full / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(ini: common.Initializer, cfg: ArchConfig, kind: str) -> dict:
+    p: dict[str, Any] = {"norm1": ini.zeros((cfg.d_model,), ("embed",))}
+    if kind in ("dense", "dense_local", "moe"):
+        p["attn"] = attention.init(ini, cfg)
+    elif kind in ("mla_dense", "mla_moe"):
+        p["attn"] = mla.init(ini, cfg)
+    elif kind == "rec":
+        p["mixer"] = rglru.init(ini, cfg)
+    elif kind == "ssd":
+        p["mixer"] = ssd.init(ini, cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "ssd":   # mamba blocks have no separate FFN
+        p["norm2"] = ini.zeros((cfg.d_model,), ("embed",))
+        if kind in ("moe", "mla_moe"):
+            p["ffn"] = moe.init(ini, cfg.d_model, cfg.moe, cfg.activation)
+        else:
+            d_ff = cfg.d_ff
+            if kind == "mla_dense" and cfg.moe and cfg.moe.first_dense_d_ff:
+                d_ff = cfg.moe.first_dense_d_ff
+            p["ffn"] = mlp.init(ini, cfg.d_model, d_ff, cfg.activation)
+    return p
+
+
+def _sublayer_full(params, x, cfg: ArchConfig, kind: str, *, positions,
+                   stem_cfg: Optional[StemConfig]):
+    """Returns (x, aux_loss)."""
+    h = common.rms_norm(x, params["norm1"])
+    if kind in ("dense", "moe"):
+        mix = attention.apply_full(params["attn"], h, cfg, positions=positions,
+                                   stem_cfg=stem_cfg)
+    elif kind == "dense_local":
+        mix = attention.apply_full(params["attn"], h, cfg, positions=positions,
+                                   stem_cfg=None, window=cfg.rglru.window)
+    elif kind in ("mla_dense", "mla_moe"):
+        mix = mla.apply_full(params["attn"], h, cfg, positions=positions,
+                             stem_cfg=stem_cfg)
+    elif kind == "rec":
+        mix = rglru.apply_full(params["mixer"], h, cfg)
+    elif kind == "ssd":
+        mix = ssd.apply_full(params["mixer"], h, cfg)
+    x = constrain(x + mix, ("batch", None, None))
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssd":
+        return x, aux
+    h2 = common.rms_norm(x, params["norm2"])
+    if kind in ("moe", "mla_moe"):
+        y, aux = moe.apply(params["ffn"], h2, cfg.moe, cfg.activation)
+    else:
+        y = mlp.apply(params["ffn"], h2, cfg.activation)
+    return constrain(x + y, ("batch", None, None)), aux
+
+
+def _sublayer_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("dense", "moe"):
+        return attention.init_cache(cfg, batch, max_len, dtype=dtype)
+    if kind == "dense_local":
+        return attention.init_cache(cfg, batch, max_len, window=cfg.rglru.window, dtype=dtype)
+    if kind in ("mla_dense", "mla_moe"):
+        return mla.init_cache(cfg, batch, max_len, dtype=dtype)
+    if kind == "rec":
+        return rglru.init_state(cfg, batch)
+    if kind == "ssd":
+        return ssd.init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _sublayer_prefill(params, x, cfg: ArchConfig, kind: str, *, positions,
+                      stem_cfg, max_len: int):
+    """Returns (x, aux, cache)."""
+    h = common.rms_norm(x, params["norm1"])
+    if kind in ("dense", "moe"):
+        mix, cache = attention.prefill_into_cache(
+            params["attn"], h, cfg, positions=positions, max_len=max_len,
+            stem_cfg=stem_cfg)
+    elif kind == "dense_local":
+        mix, cache = attention.prefill_into_cache(
+            params["attn"], h, cfg, positions=positions, max_len=max_len,
+            window=cfg.rglru.window)
+    elif kind in ("mla_dense", "mla_moe"):
+        mix, cache = mla.prefill_into_cache(
+            params["attn"], h, cfg, positions=positions, max_len=max_len,
+            stem_cfg=stem_cfg)
+    elif kind == "rec":
+        mix, cache = rglru.prefill_into_state(params["mixer"], h, cfg)
+    elif kind == "ssd":
+        mix, cache = ssd.prefill_into_state(params["mixer"], h, cfg)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssd":
+        return x, aux, cache
+    h2 = common.rms_norm(x, params["norm2"])
+    if kind in ("moe", "mla_moe"):
+        y, aux = moe.apply(params["ffn"], h2, cfg.moe, cfg.activation)
+    else:
+        y = mlp.apply(params["ffn"], h2, cfg.activation)
+    return x + y, aux, cache
+
+
+def _sublayer_decode(params, x, cfg: ArchConfig, kind: str, cache):
+    h = common.rms_norm(x, params["norm1"])
+    if kind in ("dense", "moe"):
+        mix, cache = attention.apply_decode(params["attn"], h, cfg, cache)
+    elif kind == "dense_local":
+        mix, cache = attention.apply_decode(params["attn"], h, cfg, cache,
+                                            window=cfg.rglru.window)
+    elif kind in ("mla_dense", "mla_moe"):
+        mix, cache = mla.apply_decode(params["attn"], h, cfg, cache)
+    elif kind == "rec":
+        mix, cache = rglru.apply_decode(params["mixer"], h, cfg, cache)
+    elif kind == "ssd":
+        mix, cache = ssd.apply_decode(params["mixer"], h, cfg, cache)
+    x = x + mix
+    if kind == "ssd":
+        return x, cache
+    h2 = common.rms_norm(x, params["norm2"])
+    if kind in ("moe", "mla_moe"):
+        y, _ = moe.apply(params["ffn"], h2, cfg.moe, cfg.activation)
+    else:
+        y = mlp.apply(params["ffn"], h2, cfg.activation)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Group (scan body) = sequence of sub-layers
+# ---------------------------------------------------------------------------
+
+def _init_group(ini, cfg, kinds) -> dict:
+    return {f"sub{i}": _init_sublayer(ini, cfg, k) for i, k in enumerate(kinds)}
+
+
+def _group_full(params, x, cfg, kinds, *, positions, stem_cfg):
+    aux = jnp.zeros((), jnp.float32)
+    for i, k in enumerate(kinds):
+        x, a = _sublayer_full(params[f"sub{i}"], x, cfg, k,
+                              positions=positions, stem_cfg=stem_cfg)
+        aux = aux + a
+    return x, aux
+
+
+def _stacked_group_init(ini: common.Initializer, cfg, kinds, n: int):
+    """Stack n group-param trees along a leading 'layers' axis (for scan)."""
+    def one(key):
+        sub = common.Initializer(key, ini.dtype)
+        values, _ = common.unzip(_init_group(sub, cfg, kinds))
+        return values
+    keys = jax.random.split(ini.next_key(), n)
+    values = jax.vmap(one)(keys)
+    _, axes = common.unzip(_init_group(
+        common.Initializer(jax.random.PRNGKey(0), ini.dtype), cfg, kinds))
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return common.zip_trees(values, axes)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_lm(key: jax.Array, cfg: ArchConfig) -> dict:
+    ini = common.Initializer(key, cfg.jnp_dtype)
+    p: dict[str, Any] = {
+        "embed": common.embed_init(ini, cfg.padded_vocab, cfg.d_model),
+        "final_norm": ini.zeros((cfg.d_model,), ("embed",)),
+    }
+    for si, (n, kinds) in enumerate(layer_program(cfg)):
+        p[f"segment{si}"] = _stacked_group_init(ini, cfg, kinds, n)
+    if not cfg.tie_embeddings:
+        p["head"] = ini.normal((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+                               scale=0.02, dtype=jnp.float32)
+    if cfg.mtp:
+        p["mtp_proj"] = ini.normal((2 * cfg.d_model, cfg.d_model), (None, "embed"))
+        p["mtp_norm"] = ini.zeros((cfg.d_model,), ("embed",))
+        p["mtp_layer"] = _stacked_group_init(ini, cfg, ("dense",), 1)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ArchConfig):
+    """Concrete parameter values (plain-array tree).  All apply functions
+    consume this values-only tree."""
+    return common.unzip(init_lm(key, cfg))[0]
+
+
+def abstract_params(cfg: ArchConfig):
+    """(ShapeDtypeStruct values tree, logical-axes tree) — no allocation.
+
+    The axes tree is captured as a tracing side effect (axes are static
+    Python tuples, not arrays, so they can't flow through eval_shape
+    outputs)."""
+    captured = {}
+
+    def f(key):
+        values, axes = common.unzip(init_lm(key, cfg))
+        captured["axes"] = axes
+        return values
+
+    values = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return values, captured["axes"]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch: dict, cfg: ArchConfig):
+    """Token (+ optional stub modality prefix) embeddings -> (b, s, d)."""
+    parts = []
+    if cfg.vlm_stub and "patch_embeds" in batch:
+        parts.append(batch["patch_embeds"].astype(cfg.jnp_dtype))
+    emb = common.embed_lookup(params["embed"], batch["tokens"], cfg.jnp_dtype)
+    parts.append(emb * (cfg.d_model ** 0.5) if cfg.embed_scale_flag else emb)
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def _run_segments(params, x, cfg: ArchConfig, *, positions, stem_cfg, remat: bool):
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (n, kinds) in enumerate(layer_program(cfg)):
+        seg = params[f"segment{si}"]
+
+        def body(carry, layer_params, kinds=kinds):
+            x, aux = carry
+            x, a = _group_full(layer_params, x, cfg, kinds,
+                               positions=positions, stem_cfg=stem_cfg)
+            return (x, aux + a), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        if n == 1:
+            (x, aux_total), _ = body((x, aux_total),
+                                     jax.tree.map(lambda t: t[0], seg))
+        else:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg)
+    return x, aux_total
+
+
+def _logits(params, x, cfg: ArchConfig):
+    x = common.rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        return common.lm_logits(x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                      params["head"].astype(jnp.float32))
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, *,
+            stem_cfg: Optional[StemConfig] = None, remat: bool = True):
+    """Next-token CE (+ MoE aux, + MTP).  batch: tokens (b,s), labels (b,s)."""
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    x, aux = _run_segments(params, x, cfg, positions=positions,
+                           stem_cfg=stem_cfg, remat=remat)
+    txt_len = batch["tokens"].shape[1]
+    x_txt = x[:, -txt_len:]
+    logits = _logits(params, x_txt, cfg)
+    mask = batch.get("loss_mask")
+    ce = common.cross_entropy(logits, batch["labels"], mask)
+    metrics = {"ce": ce, "aux": aux}
+    total = ce + aux
+    if cfg.mtp:
+        h = common.rms_norm(x_txt[:, :-1], params["mtp_norm"])
+        nxt = common.embed_lookup(params["embed"], batch["labels"][:, :-1], cfg.jnp_dtype)
+        hm = jnp.einsum("bse,ed->bsd", jnp.concatenate([h, nxt], -1), params["mtp_proj"])
+        hm, _ = _group_full(jax.tree.map(lambda t: t[0], params["mtp_layer"]),
+                            hm, cfg, ("dense",), positions=positions[:-1], stem_cfg=None)
+        mtp_logits = _logits(params, hm, cfg)
+        mtp_ce = common.cross_entropy(mtp_logits, batch["labels"][:, 1:])
+        metrics["mtp_ce"] = mtp_ce
+        total = total + cfg.mtp_weight * mtp_ce
+    metrics["loss"] = total
+    return total, metrics
+
+
+def forward_hiddens(params, batch: dict, cfg: ArchConfig, *,
+                    stem_cfg: Optional[StemConfig] = None):
+    """Forward pass that also returns every layer's residual stream —
+    used by the benchmark harness for the paper's per-layer sparse-vs-dense
+    MSE measurements (Table 1 / Figure 3 quantities).
+
+    Returns (logits (b, s, vocab) fp32, list of (n_layers_i, b, s, d)).
+    """
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    hiddens = []
+    for si, (n, kinds) in enumerate(layer_program(cfg)):
+        seg = params[f"segment{si}"]
+
+        def body(carry, layer_params, kinds=kinds):
+            x, aux = carry
+            x, a = _group_full(layer_params, x, cfg, kinds,
+                               positions=positions, stem_cfg=stem_cfg)
+            return (x, aux + a), x
+
+        if n == 1:
+            (x, _), y = body((x, 0.0), jax.tree.map(lambda t: t[0], seg))
+            y = y[None]
+        else:
+            (x, _), y = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), seg)
+        hiddens.append(y)
+    logits = _logits(params, x, cfg)
+    return logits, hiddens
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode over stacked caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int):
+    caches = []
+    for n, kinds in layer_program(cfg):
+        group = {f"sub{i}": _sublayer_cache(cfg, k, batch, max_len, cfg.jnp_dtype)
+                 for i, k in enumerate(kinds)}
+        stacked = jax.tree.map(lambda t: jnp.broadcast_to(t, (n,) + t.shape), group)
+        caches.append(stacked)
+    return caches
+
+
+def prefill(params, batch: dict, cfg: ArchConfig, *, max_len: int,
+            stem_cfg: Optional[StemConfig] = None):
+    """Process the full prompt.  Returns (last-position logits, caches).
+
+    Stem (the paper's contribution) runs here — this is the pre-filling
+    phase whose latency the paper optimizes.
+    """
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    caches = []
+    for si, (n, kinds) in enumerate(layer_program(cfg)):
+        seg = params[f"segment{si}"]
+
+        def body(x, layer_params, kinds=kinds):
+            aux = jnp.zeros((), jnp.float32)
+            cache = {}
+            for i, k in enumerate(kinds):
+                x, _, c = _sublayer_prefill(
+                    layer_params[f"sub{i}"], x, cfg, k, positions=positions,
+                    stem_cfg=stem_cfg, max_len=max_len)
+                cache[f"sub{i}"] = c
+            return x, cache
+
+        if n == 1:
+            x, cache = body(x, jax.tree.map(lambda t: t[0], seg))
+            cache = jax.tree.map(lambda t: t[None], cache)
+        else:
+            x, cache = jax.lax.scan(body, x, seg)
+        caches.append(cache)
+    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, tokens: jnp.ndarray, caches, cfg: ArchConfig):
+    """One token for every sequence in the batch.  tokens: (b, 1)."""
+    x = common.embed_lookup(params["embed"], tokens, cfg.jnp_dtype)
+    if cfg.embed_scale_flag:
+        x = x * (cfg.d_model ** 0.5)
+    new_caches = []
+    for si, (n, kinds) in enumerate(layer_program(cfg)):
+        seg = params[f"segment{si}"]
+        cache = caches[si]
+
+        def body(x, scanned, kinds=kinds):
+            layer_params, cache = scanned
+            new_cache = {}
+            for i, k in enumerate(kinds):
+                x, c = _sublayer_decode(layer_params[f"sub{i}"], x, cfg, k,
+                                        cache[f"sub{i}"])
+                new_cache[f"sub{i}"] = c
+            return x, new_cache
+
+        if n == 1:
+            x, nc = body(x, (jax.tree.map(lambda t: t[0], seg),
+                             jax.tree.map(lambda t: t[0], cache)))
+            nc = jax.tree.map(lambda t: t[None], nc)
+        else:
+            x, nc = jax.lax.scan(body, x, (seg, cache))
+        new_caches.append(nc)
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, new_caches

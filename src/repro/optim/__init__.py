@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, OptState, cast_params, init_state,
+                               lr_at, update)
+from repro.optim import adamw
+
+__all__ = ["AdamWConfig", "OptState", "init_state", "lr_at", "update",
+           "cast_params", "adamw"]

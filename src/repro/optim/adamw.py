@@ -1,0 +1,114 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, fp32 master
+weights, and optional bf16 gradient compression.
+
+Distributed posture (ZeRO-1-by-sharding): the optimizer state tree carries
+the *same* logical axes as the parameters, so under the sharding rules the
+fp32 master copy + moments are sharded exactly like the weights — with
+``fsdp_weights`` archs that means moments shard over (data x model) and no
+device ever holds a full optimizer replica.
+
+Gradient compression: when ``grad_dtype = "bfloat16"``, gradients are cast
+before the data-parallel all-reduce (GSPMD reduces in the cast dtype —
+halves cross-pod DCI traffic) and the update math is fp32 on the master
+copy, preserving convergence behaviour (standard mixed-precision recipe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_dtype: Optional[str] = "bfloat16"   # gradient-compression cast
+    moment_dtype: str = "float32"            # "bfloat16" halves mu/nu memory
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    master: Any      # fp32 master weights (same tree/logical axes as params)
+    mu: Any
+    nu: Any
+
+
+def init_state(params, cfg: Optional[AdamWConfig] = None) -> OptState:
+    mdt = jnp.bfloat16 if (cfg and cfg.moment_dtype == "bfloat16") else jnp.float32
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def lr_at(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def compress_grads(grads, cfg: AdamWConfig):
+    """Cast gradients before the DP all-reduce (bandwidth compression)."""
+    if cfg.grad_dtype is None:
+        return grads
+    dt = jnp.bfloat16 if cfg.grad_dtype == "bfloat16" else jnp.float32
+    return jax.tree.map(lambda g: g.astype(dt), grads)
+
+
+def update(grads, state: OptState, cfg: AdamWConfig):
+    """One AdamW step on the fp32 master; returns (bf16-cast params for the
+    next forward, new state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_at(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1.0 - b2) * g * g
+        mh = m_new / c1
+        vh = v_new / c2
+        p_new = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return m_new.astype(mdt), v_new.astype(mdt), p_new
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, state.master)
+    mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = OptState(step=step, master=master, mu=mu, nu=nu)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_state, metrics
+
+
+def cast_params(state: OptState, like) -> Any:
+    """Master fp32 -> forward dtype of the reference tree."""
+    return jax.tree.map(lambda m, p: m.astype(p.dtype), state.master, like)

@@ -1,0 +1,6 @@
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.fault_tolerance import (FailureInjector, InjectedFailure,
+                                           run_with_restarts)
+
+__all__ = ["StragglerMonitor", "FailureInjector", "InjectedFailure",
+           "run_with_restarts"]

@@ -1,0 +1,15 @@
+from repro.sharding.rules import (
+    batch_sharding,
+    cache_shardings,
+    logical_rules,
+    param_shardings,
+    spec_for,
+)
+
+__all__ = [
+    "logical_rules",
+    "spec_for",
+    "param_shardings",
+    "batch_sharding",
+    "cache_shardings",
+]

@@ -1,0 +1,47 @@
+"""Activation-sharding context: lets model code pin intermediate shardings
+by *logical* axes without knowing mesh axis names.
+
+The launch layer (dryrun/train/serve) wraps tracing in ``use(cfg, mesh)``;
+model code calls ``constrain(x, ("batch", "experts", None, None))`` at the
+few points where GSPMD's propagation is known to give up (data-dependent
+scatters: the MoE dispatch buffer) or where we want to force a boundary
+(post-attention / post-FFN residuals).  Outside the context (unit tests,
+single-device runs) ``constrain`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding import rules as rules_lib
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def use(cfg, mesh):
+    rules = rules_lib.logical_rules(cfg, mesh)
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (rules, mesh)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current():
+    """(rules, mesh) if inside a ``use`` context, else None."""
+    return getattr(_STATE, "ctx", None)
+
+
+def constrain(x: jax.Array, axes: tuple) -> jax.Array:
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    spec = rules_lib.spec_for(tuple(x.shape), axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules (MaxText-style) with shape-aware resolution.
+
+Every parameter/activation carries a tuple of logical axis names (set at
+init time in models/*).  ``logical_rules`` maps logical axes to mesh axes
+for a given arch + mesh; ``spec_for`` resolves a concrete shape to a
+``PartitionSpec``, dropping any mesh axis that does not divide the dimension
+(so e.g. gemma's 8 heads on a model=16 axis fall back to replication instead
+of uneven padding — recorded in the roofline notes).
+
+Parallelism mapping (DESIGN.md §4):
+  pod   — data parallelism across pods (gradient all-reduce only)
+  data  — data parallelism + FSDP weight sharding (``fsdp_weights`` archs)
+  model — tensor parallelism: heads / mlp / vocab / experts / rnn channels
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+MeshAxes = Optional[tuple[str, ...]]
+
+
+def _mesh_size(mesh: Mesh, names: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def logical_rules(cfg: ArchConfig, mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    """logical axis -> mesh axes (tuple; () means replicate)."""
+    batch = data_axes(mesh)
+    rules: dict[str, tuple[str, ...]] = {
+        "vocab": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "rnn": ("model",),
+        "rnn_in": (),       # gate-weight contraction dim (see rglru.init)
+        "expert_mlp": (),
+        "embed": (),
+        "head_dim": (),
+        "q_lora": (),
+        "kv_lora": (),
+        "conv": (),
+        "layers": (),
+        "batch": batch,
+        "seq": (),
+        "kv_seq": ("model",),   # cache fallback: shard cache length over TP
+        "frames": (),
+        "expert_capacity": (),
+    }
+    if cfg.fsdp_weights:
+        # ZeRO-3-style: additionally shard the big replicated weight dim over
+        # the data axis; GSPMD all-gathers at use and reduce-scatters grads.
+        rules["embed"] = ("data",)
+        rules["expert_mlp"] = ("data",) if cfg.moe else ()
+    return rules
+
+
+def spec_for(shape: tuple[int, ...], axes, rules: dict, mesh: Mesh) -> P:
+    """Shape-aware PartitionSpec: only keep mesh axes that divide the dim."""
+    if axes is None:
+        return P()
+    entries = []
+    used: set[str] = set()
+    for dim, name in zip(shape, axes):
+        if name is None:
+            entries.append(None)
+            continue
+        mesh_names = rules.get(name, ())
+        mesh_names = tuple(m for m in mesh_names if m not in used)
+        if mesh_names and dim % _mesh_size(mesh, mesh_names) == 0:
+            entries.append(mesh_names if len(mesh_names) > 1 else mesh_names[0])
+            used.update(mesh_names)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, values_tree, axes_tree):
+    """NamedSharding tree matching a (ShapeDtypeStruct|array) values tree."""
+    rules = logical_rules(cfg, mesh)
+
+    def one(v, axes):
+        return NamedSharding(mesh, spec_for(tuple(v.shape), axes, rules, mesh))
+
+    return jax.tree.map(one, values_tree, axes_tree,
+                        is_leaf=lambda t: isinstance(t, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in t))
+
+
+def zero1_shardings(cfg: ArchConfig, mesh: Mesh, values_tree, base_shardings):
+    """ZeRO-1: optimizer-state tree additionally sharded over the data (and
+    pod) axes on the largest divisible dims.  Params stay DP-replicated for
+    the forward (one all-gather per step, not per layer); pinned grads
+    reduce-scatter into the ZeRO shard."""
+    extra = [a for a in ("pod", "data") if a in mesh.axis_names]
+
+    def upgrade(v, sh):
+        spec = list(sh.spec) + [None] * (len(v.shape) - len(sh.spec))
+        used = {n for e in spec if e is not None
+                for n in ((e,) if isinstance(e, str) else e)}
+        for ax in extra:
+            if ax in used:
+                continue
+            order = sorted(range(len(v.shape)), key=lambda i: -v.shape[i])
+            for i in order:
+                entry = spec[i]
+                names = () if entry is None else (
+                    (entry,) if isinstance(entry, str) else tuple(entry))
+                cur = _mesh_size(mesh, names) if names else 1
+                if v.shape[i] % (cur * int(mesh.shape[ax])) == 0:
+                    spec[i] = (ax,) + names if names else ax
+                    used.add(ax)
+                    break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(upgrade, values_tree, base_shardings)
+
+
+def batch_sharding(cfg: ArchConfig, mesh: Mesh, spec_tree):
+    """Shardings for a batch dict of (b, ...) arrays: batch dim on data axes,
+    everything else replicated."""
+    rules = logical_rules(cfg, mesh)
+
+    def one(v):
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        return NamedSharding(mesh, spec_for(tuple(v.shape), axes, rules, mesh))
+
+    return jax.tree.map(one, spec_tree)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_tree):
+    """Shardings for serve-step caches, assigned by leaf shape heuristics.
+
+    Known leaf layouts (all with a leading stacked-layers dim):
+      (L, b, hk, S, dh)  attention KV         -> batch data, heads model;
+                          when kv_heads doesn't divide the model axis, the
+                          cache *length* S shards over model instead
+                          (flash-decoding layout; spec_for's shape-aware
+                          fallback realizes this via axis-order preference)
+      (L, b, S, r)       MLA latent / rope    -> batch data, S model
+      (L, b, w)          RG-LRU state         -> width model
+      (L, b, cw, w)      conv tails           -> width model
+      (L, b, h, p, N)    SSD state            -> heads model
+      (L,) / scalar      positions            -> replicated
+    """
+    rules = logical_rules(cfg, mesh)
+
+    def one(v):
+        shp = tuple(v.shape)
+        nd = len(shp)
+        if nd == 5:
+            axes = (None, "batch", "kv_heads", "kv_seq", None)
+            if cfg.ssd is not None:
+                axes = (None, "batch", "heads", None, None)
+        elif nd == 4:
+            if cfg.mla is not None:
+                axes = (None, "batch", "kv_seq", None)
+            else:
+                axes = (None, "batch", None, "rnn")
+        elif nd == 3:
+            axes = (None, "batch", "rnn") if (cfg.rglru or cfg.ssd) else (None, "batch", "kv_seq")
+        else:
+            axes = (None,) * nd
+        return NamedSharding(mesh, spec_for(shp, axes[:nd], rules, mesh))
+
+    return jax.tree.map(one, cache_tree)

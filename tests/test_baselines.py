@@ -1,0 +1,75 @@
+"""Baseline sparse-attention methods (the paper's comparison set)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StemConfig, dense_attention
+from repro.core.baselines import (baseline_attention, streaming_selection,
+                                  uniform_sam_selection, xattention_like_selection)
+from repro.core.schedule import schedule_for
+
+
+def _qkv(seed, b, hq, hk, n, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, hq, n, d)),
+            jax.random.normal(ks[1], (b, hk, n, d)),
+            jax.random.normal(ks[2], (b, hk, n, d)))
+
+
+def test_streaming_density_analytic():
+    """Sink + local window keeps exactly min(sink + local, i+1) blocks/row."""
+    sel = streaming_selection(nq=16, nk=16, batch=1, heads=2,
+                              sink_blocks=2, local_blocks=2)
+    counts = np.asarray(sel.block_mask).sum(axis=-1)[0, 0]
+    want = np.minimum(4, np.arange(1, 17))
+    # sink and local overlap on the first rows
+    assert (counts <= want).all() and counts[-1] == 4
+
+
+def test_uniform_sam_budget_respected():
+    q, k, v = _qkv(0, 1, 2, 2, 512, 32)
+    cfg = StemConfig(block_size=64, sink_blocks=1, local_blocks=1,
+                     min_budget_blocks=1, stride=8)
+    sel = uniform_sam_selection(q, k, v, cfg, k_uni=3)
+    counts = np.asarray(sel.block_mask).sum(axis=-1)
+    admissible = np.minimum(3, np.arange(1, 9))
+    assert (counts == admissible[None, None]).all()
+
+
+def test_xattention_tau_monotone():
+    """Higher cumulative-mass threshold keeps more blocks; tau->1 ~ dense."""
+    q, k, v = _qkv(1, 1, 2, 2, 512, 32)
+    cfg = StemConfig(block_size=64, sink_blocks=1, local_blocks=1, stride=8)
+    kept = []
+    for tau in (0.5, 0.9, 0.999999):
+        sel = xattention_like_selection(q, k, v, cfg, tau=tau)
+        kept.append(int(np.asarray(sel.block_mask).sum()))
+    assert kept[0] <= kept[1] <= kept[2]
+    full = np.tril(np.ones((8, 8))).sum() * 2  # heads
+    assert kept[-1] == full
+
+
+@pytest.mark.parametrize("method", ["uniform_sam", "streaming", "xattention"])
+def test_baselines_run_and_bounded(method):
+    q, k, v = _qkv(2, 2, 4, 2, 512, 32)
+    cfg = StemConfig(block_size=64, k_start_frac=0.4, sink_blocks=1,
+                     local_blocks=1, min_budget_blocks=1, stride=8)
+    out, density = baseline_attention(q, k, v, cfg, method=method)
+    assert out.shape == q.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert 0.0 < float(density) <= 1.0
+
+
+def test_sparse_segment_schedule():
+    """Fig. 3 analysis mode: rows outside the segment keep full budgets."""
+    cfg = StemConfig(block_size=64, k_start_frac=0.25, min_budget_blocks=1,
+                     sink_blocks=0, local_blocks=1, stride=8,
+                     sparse_segment=(0.25, 0.5))
+    b = schedule_for(cfg, 64 * 16)
+    full = np.minimum(np.arange(1, 17), 16)
+    lo, hi = 4, 8
+    np.testing.assert_array_equal(b[:lo], full[:lo])
+    np.testing.assert_array_equal(b[hi:], full[hi:])
+    assert (b[lo:hi] <= full[lo:hi]).all()
+    assert (b[lo:hi] < full[lo:hi]).any()

@@ -1,0 +1,99 @@
+"""Fault tolerance: kill -> restart -> bit-identical continuation; elastic
+reshard across meshes; straggler + failure injection in the real driver."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import train as train_mod
+from repro.runtime import FailureInjector, InjectedFailure, run_with_restarts
+
+
+def _run(argv):
+    return train_mod.main(argv)
+
+
+def test_train_smoke_and_loss_decreases(tmp_path):
+    out = _run(["--arch", "qwen3-0.6b", "--reduced", "--steps", "12",
+                "--batch", "4", "--seq", "64",
+                "--checkpoint-dir", str(tmp_path / "ckpt"),
+                "--checkpoint-every", "4", "--lr", "1e-2"])
+    losses = out["losses"]
+    assert len(losses) == 12
+    assert all(np.isfinite(l) for l in losses)
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
+
+
+def test_restart_is_bit_identical(tmp_path):
+    """Uninterrupted run == (run to step 8, die, restore at 8, continue).
+
+    This is the core fault-tolerance contract: atomic checkpoints + O(1)
+    seekable data mean a restarted job replays nothing and diverges nowhere.
+    """
+    a = str(tmp_path / "a")
+    ref = _run(["--arch", "qwen3-0.6b", "--reduced", "--steps", "10",
+                "--batch", "4", "--seq", "64", "--checkpoint-dir", a,
+                "--checkpoint-every", "100", "--lr", "1e-2"])
+
+    b = str(tmp_path / "b")
+    first = _run(["--arch", "qwen3-0.6b", "--reduced", "--steps", "8",
+                  "--batch", "4", "--seq", "64", "--checkpoint-dir", b,
+                  "--checkpoint-every", "8", "--lr", "1e-2"])
+    second = _run(["--arch", "qwen3-0.6b", "--reduced", "--steps", "10",
+                   "--batch", "4", "--seq", "64", "--checkpoint-dir", b,
+                   "--restore", "--checkpoint-every", "100", "--lr", "1e-2"])
+    np.testing.assert_allclose(ref["losses"][8:], second["losses"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_injected_failure_with_restart_harness(tmp_path):
+    """The restart harness re-runs the driver after an injected node
+    failure; the checkpoint makes the retry resume, not restart."""
+    ckpt = str(tmp_path / "ckpt")
+    calls = []
+
+    def attempt():
+        calls.append(1)
+        restore = ["--restore"] if len(calls) > 1 else []
+        return _run(["--arch", "qwen3-0.6b", "--reduced", "--steps", "10",
+                     "--batch", "4", "--seq", "64", "--checkpoint-dir", ckpt,
+                     "--checkpoint-every", "4", "--lr", "1e-2",
+                     "--fail-at", "6" if len(calls) == 1 else "-1"] + restore)
+
+    out = run_with_restarts(attempt, max_restarts=2)
+    assert len(calls) == 2
+    # restart resumed from step 4's checkpoint: 6 more steps (4..9)
+    assert len(out["losses"]) == 6
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector((3,))
+    inj.maybe_fail(2)
+    with pytest.raises(InjectedFailure):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)   # second pass (post-restart) sails through
+
+
+def test_elastic_reshard_between_meshes(tmp_path):
+    """Checkpoint written under one mesh restores onto a different mesh —
+    the elastic-scaling path (pod count changed between runs)."""
+    from repro import configs, optim
+    from repro.checkpoint import CheckpointManager
+    from repro.launch import mesh as mesh_lib, steps as steps_lib
+    from repro.models import registry
+    from repro.sharding import rules as rules_lib
+
+    cfg = configs.reduced(configs.get_config("qwen3-0.6b")).replace(dtype="float32")
+    bundle = registry.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, params)
+
+    mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
+    abstract_values, axes = bundle.abstract_params()
+    sh = rules_lib.param_shardings(cfg, mesh, abstract_values, axes)
+    restored, meta = mgr.restore(abstract_values, shardings=sh)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))

@@ -1,0 +1,113 @@
+"""Tests for the Output-Aware Metric and anti-diagonal downsampling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metric as metric_lib
+from repro.core.config import StemConfig
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_antidiag_separability_exact():
+    """Pooled routing == mean of the strided anti-diagonal logits.
+
+    The separable group-mean formulation must equal the direct
+    O(B^2) computation of mean_{(a+b) % s == 0} q_a . k_b / sqrt(d).
+    """
+    B, H, N, D, bs, s = 1, 2, 256, 32, 64, 8
+    q = _rand(0, (B, H, N, D))
+    k = _rand(1, (B, H, N, D))
+    cfg = StemConfig(block_size=bs, stride=s)
+    got = metric_lib.routing_scores(q, k, cfg)  # (B,H,nb,nb)
+
+    nb = N // bs
+    qb = np.asarray(q).reshape(B, H, nb, bs, D)
+    kb = np.asarray(k).reshape(B, H, nb, bs, D)
+    want = np.zeros((B, H, nb, nb))
+    a = np.arange(bs)[:, None]
+    b = np.arange(bs)[None, :]
+    sel = ((a + b) % s) == 0
+    for i in range(nb):
+        for j in range(nb):
+            scores = np.einsum("bhad,bhcd->bhac", qb[:, :, i], kb[:, :, j]) / np.sqrt(D)
+            want[:, :, i, j] = scores[:, :, sel].mean(axis=-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_mean_pooling_matches_explicit():
+    B, H, N, D, bs = 2, 2, 128, 16, 32
+    q = _rand(2, (B, H, N, D))
+    k = _rand(3, (B, H, N, D))
+    cfg = StemConfig(block_size=bs, stride=8, pooling="mean")
+    got = metric_lib.routing_scores(q, k, cfg)
+    qm = np.asarray(q).reshape(B, H, N // bs, bs, D).mean(axis=3)
+    km = np.asarray(k).reshape(B, H, N // bs, bs, D).mean(axis=3)
+    want = np.einsum("bhid,bhjd->bhij", qm, km) / np.sqrt(D)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_value_magnitude_blockmax():
+    B, H, N, D, bs = 1, 1, 64, 8, 16
+    v = _rand(4, (B, H, N, D))
+    got = metric_lib.value_block_magnitude(v, bs)
+    norms = np.linalg.norm(np.asarray(v), axis=-1)
+    want = np.log(norms).reshape(B, H, N // bs, bs).max(axis=-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_oam_prefers_high_magnitude_values():
+    """Two key blocks with identical routing scores: the one holding a
+    high-magnitude value must score strictly higher under OAM (Eq. 7), and
+    identically under SAM."""
+    B, H, N, D, bs = 1, 1, 128, 16, 32
+    q = _rand(5, (B, H, N, D))
+    k = jnp.tile(_rand(6, (B, H, bs, D)), (1, 1, N // bs, 1))  # identical K blocks
+    v = jnp.ones((B, H, N, D)) * 0.01
+    v = v.at[:, :, bs : 2 * bs].set(100.0)  # block 1 = high energy
+    oam = metric_lib.oam_metric(q, k, v, StemConfig(block_size=bs, stride=8))
+    sam = metric_lib.oam_metric(q, k, v, StemConfig(block_size=bs, stride=8, metric="sam"))
+    # routing identical across key blocks:
+    np.testing.assert_allclose(np.asarray(sam[..., 0]), np.asarray(sam[..., 1]), rtol=1e-5)
+    assert (np.asarray(oam[..., 1]) > np.asarray(oam[..., 0])).all()
+
+
+def test_oam_magnitude_clamped_at_zero():
+    """max(0, log||V||): tiny-norm values must not be *penalized* below
+    pure routing (the clamp in Eq. 7)."""
+    B, H, N, D, bs = 1, 1, 64, 16, 32
+    q, k = _rand(7, (B, H, N, D)), _rand(8, (B, H, N, D))
+    v = jnp.full((B, H, N, D), 1e-8)
+    cfg = StemConfig(block_size=bs, stride=8)
+    oam = metric_lib.oam_metric(q, k, v, cfg)
+    sam = metric_lib.oam_metric(q, k, v, StemConfig(block_size=bs, stride=8, metric="sam"))
+    np.testing.assert_allclose(np.asarray(oam), np.asarray(sam), rtol=1e-5, atol=1e-6)
+
+
+def test_gqa_broadcast_and_group_reduce():
+    B, Hq, Hk, N, D, bs = 2, 8, 2, 128, 16, 32
+    q = _rand(9, (B, Hq, N, D))
+    k = _rand(10, (B, Hk, N, D))
+    v = _rand(11, (B, Hk, N, D))
+    cfg = StemConfig(block_size=bs, stride=8)
+    m = metric_lib.oam_metric(q, k, v, cfg)
+    assert m.shape == (B, Hq, N // bs, N // bs)
+    red = metric_lib.group_reduce_metric(m, Hq // Hk, "mean")
+    g = np.asarray(red).reshape(B, Hk, Hq // Hk, N // bs, N // bs)
+    for gi in range(1, Hq // Hk):
+        np.testing.assert_allclose(g[:, :, 0], g[:, :, gi])
+
+
+def test_metric_matches_true_mean_logit_scale():
+    """Pooled routing should approximate the mean block logit: unbiased for
+    mean pooling, and close for antidiag (it samples 1/s of the pairs)."""
+    B, H, N, D, bs = 1, 1, 256, 64, 64
+    q, k = _rand(12, (B, H, N, D)), _rand(13, (B, H, N, D))
+    true = np.einsum("bhqd,bhkd->bhqk", np.asarray(q), np.asarray(k)) / np.sqrt(D)
+    nb = N // bs
+    true_block = true.reshape(B, H, nb, bs, nb, bs).mean(axis=(3, 5))
+    got = metric_lib.routing_scores(q, k, StemConfig(block_size=bs, stride=8, pooling="mean"))
+    np.testing.assert_allclose(np.asarray(got), true_block, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests on reduced configs (CPU).
+
+For every assigned arch: instantiate the reduced family variant, run one
+forward/loss, one train-style grad step, one prefill + decode step.  Assert
+shapes and no NaNs.  The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import RunShape
+from repro.core.config import StemConfig
+from repro.models import registry
+
+ARCHS = sorted(configs.ASSIGNED)
+SMOKE_SEQ = 64
+SMOKE_BATCH = 2
+
+SMOKE_STEM = StemConfig(block_size=16, k_start_frac=0.75, mu=0.8, sink_blocks=1,
+                        local_blocks=1, min_budget_blocks=2, stride=4)
+
+
+def _smoke_batch(cfg, key, with_labels=True):
+    ks = jax.random.split(key, 3)
+    b = {}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(
+            ks[0], (SMOKE_BATCH, cfg.encdec.encoder_frames, cfg.d_model), jnp.float32)
+        b["tokens"] = jax.random.randint(ks[1], (SMOKE_BATCH, SMOKE_SEQ), 0, cfg.vocab_size)
+    elif cfg.vlm_stub:
+        s_img = SMOKE_SEQ // 4
+        b["patch_embeds"] = jax.random.normal(
+            ks[0], (SMOKE_BATCH, s_img, cfg.d_model), jnp.float32)
+        b["tokens"] = jax.random.randint(ks[1], (SMOKE_BATCH, SMOKE_SEQ - s_img), 0, cfg.vocab_size)
+    else:
+        b["tokens"] = jax.random.randint(ks[1], (SMOKE_BATCH, SMOKE_SEQ), 0, cfg.vocab_size)
+    if with_labels:
+        b["labels"] = jnp.roll(b["tokens"], -1, axis=1)
+    return b
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Build reduced bundles + params once per module (they're tiny)."""
+    out = {}
+    for name in ARCHS:
+        cfg = configs.reduced(configs.get_config(name)).replace(dtype="float32")
+        bundle = registry.build(cfg)
+        params = bundle.init_params(jax.random.PRNGKey(0))
+        out[name] = (cfg, bundle, params)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_loss(built, name):
+    cfg, bundle, params = built[name]
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    loss, metrics = bundle.loss_fn(params, batch, remat=False)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{name}: loss={loss}"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_grad_step(built, name):
+    cfg, bundle, params = built[name]
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(2))
+
+    def f(p):
+        return bundle.loss_fn(p, batch, remat=True)[0]
+
+    grads = jax.grad(f)(params)
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat), name
+    # at least some signal somewhere
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat), name
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode(built, name):
+    cfg, bundle, params = built[name]
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(3), with_labels=False)
+    max_len = SMOKE_SEQ + 8
+    logits, caches = bundle.prefill(params, batch, max_len=max_len)
+    assert logits.shape == (SMOKE_BATCH, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all(), name
+    nxt = jnp.argmax(logits, axis=-1)[:, None]
+    logits2, caches = bundle.decode_step(params, nxt, caches)
+    assert logits2.shape == (SMOKE_BATCH, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2)).all(), name
+
+
+@pytest.mark.parametrize("name", [n for n in ARCHS
+                                  if configs.get_config(n).use_stem])
+def test_stem_in_prefill(built, name):
+    """Stem sparse prefill must run and stay close to the dense prefill."""
+    cfg, bundle, params = built[name]
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(4), with_labels=False)
+    max_len = SMOKE_SEQ + 8
+    dense_logits, _ = bundle.prefill(params, batch, max_len=max_len)
+    stem_logits, _ = bundle.prefill(params, batch, max_len=max_len,
+                                    stem_cfg=SMOKE_STEM)
+    assert np.isfinite(np.asarray(stem_logits)).all()
+    # Random-init reduced models give near-noise attention, so this is an
+    # integration check (the path runs, output correlates), not an accuracy
+    # claim — benchmarks/ measures reconstruction error properly.
+    cos = np.sum(np.asarray(dense_logits) * np.asarray(stem_logits)) / (
+        np.linalg.norm(dense_logits) * np.linalg.norm(stem_logits) + 1e-9)
+    assert cos > 0.3, f"{name}: cos={cos}"
+
+
+@pytest.mark.parametrize("name", ["mamba2-370m", "recurrentgemma-2b"])
+def test_recurrent_decode_matches_prefill(built, name):
+    """Decode must continue exactly from the prefill state: prefill(n+1)
+    logits == prefill(n) -> decode_step(token n)."""
+    cfg, bundle, params = built[name]
+    key = jax.random.PRNGKey(5)
+    toks = jax.random.randint(key, (SMOKE_BATCH, SMOKE_SEQ + 1), 0, cfg.vocab_size)
+    full, _ = bundle.prefill(params, {"tokens": toks}, max_len=SMOKE_SEQ + 8)
+    part, caches = bundle.prefill(params, {"tokens": toks[:, :-1]}, max_len=SMOKE_SEQ + 8)
+    step, _ = bundle.decode_step(params, toks[:, -1:], caches)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_full_configs():
+    """Full-config parameter counts land near the published sizes."""
+    expect = {
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "glm4-9b": (8e9, 11e9),
+        "gemma-2b": (2e9, 3.5e9),
+        "qwen1.5-4b": (3e9, 5e9),
+        "recurrentgemma-2b": (2e9, 3.6e9),
+        "arctic-480b": (380e9, 560e9),
+        "deepseek-v3-671b": (600e9, 750e9),
+        "mamba2-370m": (0.3e9, 0.5e9),
+        # whisper-medium is 769M (enc+dec); our 64k learned-position table
+        # (needed for the assigned 32k decode cell vs whisper's native 448)
+        # adds ~67M.
+        "whisper-medium": (0.6e9, 0.95e9),
+        "pixtral-12b": (11e9, 14e9),
+    }
+    for name, (lo, hi) in expect.items():
+        total, active = registry.param_counts(configs.get_config(name))
+        assert lo <= total <= hi, f"{name}: {total/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+        assert active <= total

@@ -1,0 +1,109 @@
+"""Property tests for the Token Position-Decay schedule (Eq. 2/3/4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import config as config_lib
+from repro.core import schedule
+
+
+@given(
+    seq_len=st.integers(64, 8192),
+    k_start=st.integers(1, 2048),
+    mu=st.floats(0.05, 1.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_token_budget_monotone_decay(seq_len, k_start, mu):
+    k = schedule.tpd_budget_tokens(seq_len, k_start, mu)
+    assert k.shape == (seq_len,)
+    assert (np.diff(k) <= 0).all(), "budgets must be non-increasing in position"
+    assert k[0] == max(k_start, 1)
+    # Eq. 3 endpoint: k(N-1) ~ mu * k_start (within one floor step).
+    expected_end = k_start - k_start * (1.0 - mu) * (seq_len - 1) / seq_len
+    assert abs(int(k[-1]) - expected_end) <= 1.0
+
+
+@given(
+    nq=st.integers(1, 512),
+    k_start=st.integers(1, 256),
+    mu=st.floats(0.1, 1.0),
+    min_budget=st.integers(0, 64),
+)
+@settings(max_examples=200, deadline=None)
+def test_block_budget_bounds(nq, k_start, mu, min_budget):
+    b = schedule.tpd_budget_blocks(nq, nq, k_start, mu, min_budget_blocks=min_budget)
+    admissible = np.arange(1, nq + 1)
+    assert (b <= admissible).all(), "can't exceed causally admissible blocks"
+    floor = np.minimum(np.maximum(1, min_budget), admissible)
+    assert (b >= floor).all(), "per-row floor must hold"
+    assert b.dtype == np.int32
+
+
+@given(
+    seq_len=st.integers(256, 16384),
+    k_start=st.integers(16, 1024),
+    mu=st.floats(0.3, 1.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_cost_model_eq4_matches_measured(seq_len, k_start, mu):
+    """Eq. (4) should approximate the exact computed-pair count in the
+    paper's operating regime (k_start <= ~0.2 N; the approximation ignores
+    the interaction between the causal triangle and the decay, which only
+    matters for very large k_start/N)."""
+    k_start = min(k_start, seq_len // 5)
+    measured = schedule.measured_cost_tokens(seq_len, k_start, mu)
+    analytic = schedule.cost_decay(seq_len, k_start, mu)
+    assert measured <= schedule.cost_uniform(seq_len, k_start) + k_start
+    rel = abs(measured - analytic) / max(analytic, 1.0)
+    # Two approximation sources: the dropped triangle-decay interaction
+    # (~ (1-mu) k_start/N) and Eq. 3's floor() (~ 1 token/row -> ~ 1/k_avg).
+    k_avg = max(k_start * (1.0 + mu) / 2.0, 1.0)
+    bound = (1.0 - mu) * k_start / seq_len + 1.0 / k_avg + 0.005
+    assert rel < bound, (measured, analytic, rel, bound)
+
+
+def test_decay_saves_vs_uniform():
+    """Eq. (4)'s savings term: decay must be cheaper than uniform@k_start."""
+    for mu in (0.5, 0.7, 0.9):
+        c_dec = schedule.measured_cost_tokens(8192, 1024, mu)
+        c_uni = schedule.measured_cost_tokens(8192, 1024, 1.0)
+        assert c_dec < c_uni
+        # savings grow as mu shrinks
+    s = [
+        schedule.measured_cost_tokens(8192, 1024, 1.0)
+        - schedule.measured_cost_tokens(8192, 1024, mu)
+        for mu in (0.9, 0.7, 0.5)
+    ]
+    assert s[0] < s[1] < s[2]
+
+
+def test_uniform_equivalent_budget_matches_paper():
+    """Table 5 setup: k_uni = k_start (1+mu)/2; mu=0.7 -> 0.85 k_start."""
+    assert config_lib.uniform_equivalent_budget(100, 0.7) == 85
+    assert config_lib.uniform_equivalent_budget(64, 1.0) == 64
+
+
+def test_paper_length_rule():
+    cfg = config_lib.StemConfig()
+    assert cfg.k_start_fraction(8192) == 0.2
+    assert cfg.k_start_fraction(16384) == 0.2
+    assert cfg.k_start_fraction(32768) == 0.1
+    # 32k: N_blk = 256 -> k_start 25 blocks, floored later by min budget 54.
+    assert cfg.k_start_blocks(32768) == 25
+
+
+def test_schedule_for_respects_min_budget():
+    cfg = config_lib.StemConfig(block_size=128, min_budget_blocks=54)
+    b = schedule.schedule_for(cfg, 32768)
+    assert b.shape == (256,)
+    assert b[-1] >= 54
+    assert b[0] == 1  # causal clamp at the first row
+    assert int(b.max()) <= 256
+
+
+def test_decode_shapes_use_kv_offset():
+    """Decode: 1 query block against a long cache — all budgets clamp to nk."""
+    cfg = config_lib.StemConfig(block_size=128, min_budget_blocks=4, k_start_frac=0.5)
+    b = schedule.schedule_for(cfg, 128, kv_len=4096)
+    assert b.shape == (1,)
+    assert 1 <= int(b[0]) <= 32

@@ -1,0 +1,96 @@
+"""Tests for Top-k(i) block selection with sink/local floors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as sel_lib
+
+
+def _metric(key, b, h, nq, nk):
+    return jax.random.normal(jax.random.PRNGKey(key), (b, h, nq, nk), jnp.float32)
+
+
+def test_causal_admissibility():
+    m = _metric(0, 1, 1, 8, 8)
+    budgets = jnp.full((8,), 8, jnp.int32)
+    s = sel_lib.select_blocks(m, budgets, 8, sink_blocks=1, local_blocks=1)
+    mask = np.asarray(s.block_mask)[0, 0]
+    for i in range(8):
+        assert not mask[i, i + 1 :].any(), f"row {i} selected a future block"
+
+
+def test_forced_sink_and_local_always_kept():
+    m = _metric(1, 2, 3, 16, 16) - 100.0  # make everything unattractive
+    budgets = jnp.full((16,), 6, jnp.int32)
+    s = sel_lib.select_blocks(m, budgets, 6, sink_blocks=2, local_blocks=2)
+    mask = np.asarray(s.block_mask)
+    for i in range(16):
+        for j in range(min(2, i + 1)):  # sinks (causally admissible)
+            assert mask[..., i, j].all(), f"sink block {j} dropped at row {i}"
+        for j in range(max(0, i - 1), i + 1):  # local
+            if i >= 2 and mask.shape[-1] > j:
+                assert mask[..., i, j].all(), f"local block {j} dropped at row {i}"
+
+
+@given(
+    nq=st.integers(2, 24),
+    budget=st.integers(1, 24),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=50, deadline=None)
+def test_budget_exactly_respected(nq, budget, seed):
+    m = _metric(seed, 1, 2, nq, nq)
+    budgets = jnp.minimum(jnp.full((nq,), budget, jnp.int32), jnp.arange(1, nq + 1))
+    s = sel_lib.select_blocks(m, budgets, int(budgets.max()), sink_blocks=1, local_blocks=1)
+    counts = np.asarray(s.block_mask).sum(axis=-1)
+    want = np.asarray(budgets)
+    assert (counts == want[None, None, :]).all(), (counts, want)
+
+
+def test_indices_and_mask_agree():
+    m = _metric(7, 2, 2, 12, 12)
+    budgets = jnp.minimum(jnp.full((12,), 5, jnp.int32), jnp.arange(1, 13))
+    s = sel_lib.select_blocks(m, budgets, 5, sink_blocks=1, local_blocks=1)
+    idx = np.asarray(s.indices)
+    live = np.asarray(s.slot_mask)
+    mask = np.asarray(s.block_mask)
+    rebuilt = np.zeros_like(mask)
+    b, h, nq, km = idx.shape
+    for bi in range(b):
+        for hi in range(h):
+            for i in range(nq):
+                for t in range(km):
+                    if live[bi, hi, i, t]:
+                        rebuilt[bi, hi, i, idx[bi, hi, i, t]] = True
+    np.testing.assert_array_equal(mask, rebuilt)
+
+
+def test_selected_are_topk_of_metric():
+    """Non-forced selected blocks must dominate non-selected ones."""
+    m = _metric(9, 1, 1, 10, 10)
+    budgets = jnp.minimum(jnp.full((10,), 4, jnp.int32), jnp.arange(1, 11))
+    s = sel_lib.select_blocks(m, budgets, 4, sink_blocks=1, local_blocks=1)
+    mask = np.asarray(s.block_mask)[0, 0]
+    mm = np.asarray(m)[0, 0]
+    forced = np.asarray(sel_lib.forced_block_mask(10, 10, 1, 1))
+    for i in range(10):
+        sel_vals = mm[i, mask[i] & ~forced[i]]
+        not_sel = mm[i, : i + 1][~mask[i, : i + 1] & ~forced[i, : i + 1]]
+        if len(sel_vals) and len(not_sel):
+            assert sel_vals.min() >= not_sel.max() - 1e-5
+
+
+def test_token_mask_exact_causal_inside_diagonal():
+    bm = jnp.ones((1, 1, 2, 2), jnp.bool_)
+    tm = np.asarray(sel_lib.block_mask_to_token_mask(bm, 4, 4, 8, 8))[0, 0]
+    for i in range(8):
+        for j in range(8):
+            assert tm[i, j] == (j <= i)
+
+
+def test_density_full_budget_is_one():
+    m = _metric(11, 1, 1, 6, 6)
+    budgets = jnp.arange(1, 7, dtype=jnp.int32)
+    s = sel_lib.select_blocks(m, budgets, 6, sink_blocks=1, local_blocks=1)
+    assert float(sel_lib.selection_density(s, 6)) == 1.0

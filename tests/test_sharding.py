@@ -1,0 +1,98 @@
+"""Sharding rules: shape-aware resolution, ZeRO-1 upgrades, cache layouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import registry
+from repro.sharding import rules as rules_lib
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs host-device mesh (dryrun XLA flags)")
+
+
+def _mesh(multi=False):
+    if multi:
+        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def test_spec_shape_aware_fallback():
+    mesh = _mesh()
+    cfg = configs.get_config("qwen3-0.6b")
+    rules = rules_lib.logical_rules(cfg, mesh)
+    # divisible: heads 16 over model=4
+    assert rules_lib.spec_for((1024, 16, 128), ("embed", "heads", "head_dim"),
+                              rules, mesh) == P(None, "model")
+    # non-divisible dim falls back to replication, no uneven padding
+    assert rules_lib.spec_for((1024, 10, 128), ("embed", "heads", "head_dim"),
+                              rules, mesh) == P()
+
+
+def test_no_mesh_axis_used_twice():
+    mesh = _mesh()
+    cfg = configs.get_config("deepseek-v3-671b")
+    rules = rules_lib.logical_rules(cfg, mesh)
+    spec = rules_lib.spec_for((256, 7168, 2048), ("experts", "embed", "expert_mlp"),
+                              rules, mesh)
+    used = [n for e in spec if e for n in ((e,) if isinstance(e, str) else e)]
+    assert len(used) == len(set(used))
+    assert "model" in used and "data" in used   # EP + FSDP
+
+
+def test_param_shardings_cover_all_archs():
+    mesh = _mesh()
+    for name in configs.ASSIGNED:
+        cfg = configs.get_config(name)
+        bundle = registry.build(cfg)
+        values, axes = bundle.abstract_params()
+        sh = rules_lib.param_shardings(cfg, mesh, values, axes)
+        for v, s in zip(jax.tree.leaves(values), jax.tree.leaves(sh)):
+            # every sharded dim must divide
+            spec = list(s.spec) + [None] * (len(v.shape) - len(s.spec))
+            for dim, entry in zip(v.shape, spec):
+                if entry is None:
+                    continue
+                names = (entry,) if isinstance(entry, str) else entry
+                total = int(np.prod([mesh.shape[n] for n in names]))
+                assert dim % total == 0, (name, v.shape, s.spec)
+
+
+def test_zero1_adds_data_axis():
+    mesh = _mesh(multi=True)
+    cfg = configs.get_config("qwen3-0.6b")
+    bundle = registry.build(cfg)
+    values, axes = bundle.abstract_params()
+    base = rules_lib.param_shardings(cfg, mesh, values, axes)
+    z1 = rules_lib.zero1_shardings(cfg, mesh, values, base)
+    embed_base = jax.tree.leaves(base)[0].spec
+    bigger = 0
+    for v, b, z in zip(jax.tree.leaves(values), jax.tree.leaves(base),
+                       jax.tree.leaves(z1)):
+        nb = [n for e in b.spec if e for n in ((e,) if isinstance(e, str) else e)]
+        nz = [n for e in z.spec if e for n in ((e,) if isinstance(e, str) else e)]
+        assert set(nb) <= set(nz)
+        if len(nz) > len(nb):
+            bigger += 1
+    assert bigger > 0, "ZeRO-1 sharded nothing extra"
+
+
+def test_cache_layouts():
+    mesh = _mesh()
+    # GQA arch with divisible heads -> heads sharded; indivisible -> kv_seq
+    cfg = configs.get_config("qwen3-0.6b")   # kv=8, model=4 -> divisible
+    caches = registry.abstract_caches(cfg, configs.DECODE_32K)
+    sh = rules_lib.cache_shardings(cfg, mesh, caches)
+    kv_spec = jax.tree.leaves(sh)[0].spec
+    flat = [n for e in kv_spec if e for n in ((e,) if isinstance(e, str) else e)]
+    assert "model" in flat and "data" in flat
+
+
+def test_batch_sharding_respects_divisibility():
+    mesh = _mesh()
+    cfg = configs.get_config("mamba2-370m")
+    spec = {"tokens": jax.ShapeDtypeStruct((1, 128), jnp.int32)}   # batch 1
+    sh = rules_lib.batch_sharding(cfg, mesh, spec)
+    assert sh["tokens"].spec == P()   # batch=1 can't shard over data=2
