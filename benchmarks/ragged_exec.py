@@ -1,0 +1,179 @@
+"""A/B harness: padded seed executor vs the ragged/deduped engine.
+
+Times the sparse *execution phase* in isolation (selection is identical in
+both arms) at the acceptance geometry — seq=8192, block=128, mu=0.25,
+GQA group=4 — and verifies the ragged output against a row-chunked dense
+masked oracle (same selection, full-softmax fp32 math).  Demonstrates that
+ragged wall-clock tracks ``avg_budget_blocks`` where the padded executor
+pays ``k_max`` on every row (DESIGN.md §Ragged slot layout).
+
+Writes ``BENCH_ragged.json`` so CI keeps a perf trajectory across PRs.
+
+Standalone: ``PYTHONPATH=src python benchmarks/ragged_exec.py [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import StemConfig, schedule
+from repro.core.sparse_attention import _gather_executor, select_for
+
+NEG_INF = -1e30
+
+
+def bench_cfg(**kw) -> StemConfig:
+    base = dict(
+        block_size=128, k_start_frac=0.5, mu=0.25, beta=0.2,
+        sink_blocks=1, local_blocks=1, min_budget_blocks=2, stride=16,
+        group_reduce="mean", slot_chunk=4,
+    )
+    base.update(kw)
+    return StemConfig(**base)
+
+
+def timer(fn, *args, repeats=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def dense_oracle_rowchunked(q, k, v, block_mask, block_size, rows_per_chunk=4):
+    """O(N^2) masked oracle, streamed over query-block-row chunks so the
+    (sq_chunk, sk) score matrix stays bounded at long sequence lengths.
+
+    q: (b, hq, sq, d); k, v: (b, hk, sk, d); block_mask: (b, hq, nq, nk).
+    Full-softmax fp32 math — the bitwise reference the executors chase.
+    """
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    group = hq // hk
+    bs = block_size
+    nq = sq // bs
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    outs = []
+    for r0 in range(0, nq, rows_per_chunk):
+        r1 = min(r0 + rows_per_chunk, nq)
+        qc = q[:, :, r0 * bs:r1 * bs].astype(jnp.float32) * (d ** -0.5)
+        qc = qc.reshape(b, hk, group, (r1 - r0) * bs, d)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kf)
+        bm = block_mask[:, :, r0:r1]                     # (b, hq, rows, nk)
+        tok = jnp.repeat(jnp.repeat(bm, bs, axis=-2), bs, axis=-1)
+        qi = (sk - sq) + r0 * bs + jnp.arange((r1 - r0) * bs)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        tok = tok & (kj <= qi)
+        s = jnp.where(tok.reshape(b, hk, group, (r1 - r0) * bs, sk), s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        outs.append(jnp.einsum("bhgqk,bhkd->bhgqd", p, vf))
+    out = jnp.concatenate(outs, axis=3)
+    return out.reshape(b, hq, sq, -1)
+
+
+def run_case(seq: int, dtype, repeats: int) -> dict:
+    b, hk, group, d = 1, 2, 4, 64
+    hq = hk * group
+    cfg = bench_cfg()
+    bs = cfg.block_size
+    scale = d ** -0.5
+
+    ks = jax.random.split(jax.random.PRNGKey(seq), 3)
+    q = jax.random.normal(ks[0], (b, hq, seq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hk, seq, d), dtype)
+    v = jax.random.normal(ks[2], (b, hk, seq, d), dtype)
+
+    # One shared selection for both arms (block mask only feeds the oracle;
+    # at block granularity it is tiny).
+    sel, k_max = select_for(q, k, v, cfg, with_block_mask=True)
+    sel = jax.tree.map(jax.block_until_ready, sel)
+    budgets = schedule.schedule_for(cfg, seq)
+    idx_dedup = sel.indices[:, ::group]
+    msk_dedup = sel.slot_mask[:, ::group]
+
+    padded_fn = jax.jit(lambda q, k, v, i, m: _gather_executor(
+        q, k, v, i, m, block_size=bs, scale=scale, slot_chunk=cfg.slot_chunk,
+        budgets=None, group_dedup=False))
+    ragged_fn = jax.jit(lambda q, k, v, i, m: _gather_executor(
+        q, k, v, i, m, block_size=bs, scale=scale, slot_chunk=cfg.slot_chunk,
+        budgets=budgets, group_dedup=True))
+
+    t_padded = timer(padded_fn, q, k, v, sel.indices, sel.slot_mask, repeats=repeats)
+    t_ragged = timer(ragged_fn, q, k, v, idx_dedup, msk_dedup, repeats=repeats)
+
+    out_ragged = ragged_fn(q, k, v, idx_dedup, msk_dedup)
+    out_padded = padded_fn(q, k, v, sel.indices, sel.slot_mask)
+    oracle = dense_oracle_rowchunked(q, k, v, sel.block_mask, bs)
+    err_ragged = float(jnp.abs(out_ragged.astype(jnp.float32) - oracle).max())
+    err_padded = float(jnp.abs(out_padded.astype(jnp.float32) - oracle).max())
+
+    chunk = cfg.slot_chunk
+    padded_chunks = (len(budgets) * -(-int(k_max) // chunk))
+    ragged_chunks = int(sum(max(1, -(-int(x) // chunk)) for x in budgets))
+    return {
+        "seq": seq,
+        "dtype": str(jnp.dtype(dtype)),
+        "block_size": bs,
+        "mu": cfg.mu,
+        "group": group,
+        "heads": {"q": hq, "kv": hk},
+        "k_max": int(k_max),
+        "avg_budget_blocks": float(np.mean(budgets)),
+        "slot_chunks": {"padded": padded_chunks, "ragged": ragged_chunks},
+        "t_padded_s": t_padded,
+        "t_ragged_s": t_ragged,
+        "speedup": t_padded / t_ragged,
+        "max_abs_err_ragged": err_ragged,
+        "max_abs_err_padded": err_padded,
+    }
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py entry point: CSV rows from the quick geometry."""
+    case = run_case(2048 if quick else 8192, jnp.bfloat16, repeats=3)
+    return [
+        ("ragged_exec/padded", case["t_padded_s"] * 1e6,
+         f"k_max={case['k_max']}"),
+        ("ragged_exec/ragged", case["t_ragged_s"] * 1e6,
+         f"speedup={case['speedup']:.2f}x;avg_budget={case['avg_budget_blocks']:.1f};"
+         f"err={case['max_abs_err_ragged']:.2e}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: seq=2048, fewer repeats")
+    ap.add_argument("--out", default="BENCH_ragged.json")
+    args = ap.parse_args()
+
+    seq = 2048 if args.quick else 8192
+    repeats = 3 if args.quick else 5
+    case = run_case(seq, jnp.bfloat16, repeats=repeats)
+    report = {
+        "benchmark": "ragged_exec",
+        "mode": "quick" if args.quick else "full",
+        "backend": jax.default_backend(),
+        "case": case,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    ok = case["speedup"] >= 1.5 and case["max_abs_err_ragged"] <= 2e-2
+    print(f"# speedup {case['speedup']:.2f}x "
+          f"(padded {case['t_padded_s']*1e3:.1f} ms -> ragged {case['t_ragged_s']*1e3:.1f} ms), "
+          f"max|err| {case['max_abs_err_ragged']:.2e} "
+          f"-> {'PASS' if ok else 'BELOW TARGET'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,8 @@ accuracy benchmarks).  Mapping to the paper:
   position_sensitivity.py Figure 3 (loss vs sparsified position segment)
   cost_model.py           Eq. 2/4  (analytic vs measured computed pairs)
   roofline.py             EXPERIMENTS.md roofline collation (from dry-run)
+  ragged_exec.py          padded vs ragged/deduped executor A/B (DESIGN.md;
+                          also writes BENCH_ragged.json standalone)
 """
 from __future__ import annotations
 
@@ -19,11 +21,13 @@ import traceback
 
 def main() -> None:
     from benchmarks import (ablation, cost_model, latency, oam_vs_sam,
-                            position_sensitivity, roofline, sensitivity)
+                            position_sensitivity, ragged_exec, roofline,
+                            sensitivity)
 
     modules = [
         ("cost_model", cost_model),
         ("latency", latency),
+        ("ragged_exec", ragged_exec),
         ("oam_vs_sam", oam_vs_sam),
         ("ablation", ablation),
         ("sensitivity", sensitivity),

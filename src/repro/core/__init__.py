@@ -11,7 +11,14 @@ from repro.core.schedule import (
     tpd_budget_tokens,
 )
 from repro.core.metric import oam_metric, routing_scores, value_block_magnitude
-from repro.core.selection import BlockSelection, select_blocks
+from repro.core.selection import (
+    BlockSelection,
+    RaggedSegment,
+    budget_sorted_segments,
+    revisit_indices,
+    select_blocks,
+    selection_density,
+)
 from repro.core.sparse_attention import StemStats, dense_attention, stem_attention
 
 __all__ = [
@@ -29,7 +36,11 @@ __all__ = [
     "routing_scores",
     "value_block_magnitude",
     "BlockSelection",
+    "RaggedSegment",
+    "budget_sorted_segments",
+    "revisit_indices",
     "select_blocks",
+    "selection_density",
     "stem_attention",
     "dense_attention",
     "StemStats",

@@ -40,6 +40,11 @@ class StemConfig:
         masked oracle, tests only).
       slot_chunk: number of selected key blocks processed per inner step of
         the XLA flash-style executor (memory/latency trade-off).
+      ragged: budget-aware ragged execution (DESIGN.md).  Rows run only the
+        slot chunks their TPD budget needs (budget-sorted segment schedule)
+        and GQA groups with shared selection deduplicate K/V block fetches
+        to one per KV head.  False restores the padded execution where every
+        row pays k_max slots — kept for A/B benchmarking (ragged_exec.py).
     """
 
     block_size: int = 128
@@ -55,6 +60,7 @@ class StemConfig:
     group_reduce: str = "none"
     backend: str = "xla"
     slot_chunk: int = 8
+    ragged: bool = True
     # Analysis knob (paper Fig. 3): when set to (lo, hi) fractions, only
     # query rows in [lo*N, hi*N) are sparsified; all other rows keep their
     # full causal budget.  None = sparsify everywhere (normal operation).

@@ -24,6 +24,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import metric as metric_lib
 from repro.core import selection as selection_lib
@@ -55,7 +56,12 @@ def sparse_decode_attention(
     cfg: StemConfig,
     budget_frac: float = 0.25,
 ) -> jnp.ndarray:
-    """OAM block selection + exact attention over selected cache blocks."""
+    """OAM block selection + exact attention over selected cache blocks.
+
+    The top-k width is capped at a *static* bound derived from
+    ``budget_frac`` + the stability floors, so the block gather moves
+    O(k_avg * B) cache tokens per step instead of the whole cache.
+    """
     b, hq, _, d = q.shape
     hk = cache_k.shape[1]
     group = hq // hk
@@ -84,7 +90,16 @@ def sparse_decode_attention(
     biased = jnp.where(is_sink | is_local, m + selection_lib.FORCE_BONUS, m)
     biased = jnp.where(is_valid, biased, NEG_INF)
 
-    k_max = nblk   # static; slots beyond budget masked below
+    # Static budget bound so the gather below is O(k_avg * B), not O(L):
+    # the dynamic k_budget never exceeds ceil(nblk * budget_frac) +
+    # min_budget_blocks, and the forced sink/local floors ride on top (they
+    # carry FORCE_BONUS, so they occupy the leading top-k slots).
+    k_max = min(
+        nblk,
+        int(np.ceil(nblk * budget_frac)) + cfg.min_budget_blocks
+        + cfg.sink_blocks + cfg.local_blocks,
+    )
+    k_max = max(k_max, 1)
     vals, idx = jax.lax.top_k(biased, k_max)                     # (b,hk,g,n)
     live = (vals > NEG_INF / 2) & (jnp.arange(k_max) < k_budget)
 

@@ -11,13 +11,22 @@ Outputs come in two equivalent forms:
     consumed by the gather executor and the Pallas kernel (scalar prefetch);
   * a dense boolean block mask (batch, heads, nq, nk) — consumed by the
     O(N^2) oracle executor and by tests.
+
+Ragged layout (DESIGN.md §Ragged slot layout): live slots always form a
+*prefix* of the slot axis — top_k sorts values descending, the budget cut is
+a prefix, and inadmissible picks sort last — so a per-row ``live_counts``
+scalar fully describes validity.  ``revisit_indices`` re-points dead slots at
+the row's last live block so the Pallas pipeline re-uses the already-fetched
+K/V tile (zero new DMAs), and ``budget_sorted_segments`` turns the static
+TPD budget vector into the segment schedule the ragged XLA executor runs.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
 FORCE_BONUS = 1e30
@@ -28,15 +37,33 @@ class BlockSelection(NamedTuple):
 
     indices: (batch, heads, nq, k_max) int32 key-block ids (invalid slots
       point at block 0 but are masked out).
-    slot_mask: (batch, heads, nq, k_max) bool — True for live slots.
+    slot_mask: (batch, heads, nq, k_max) bool — True for live slots.  Live
+      slots are always a contiguous prefix (see module docstring).
     block_mask: (batch, heads, nq, nk) bool dense equivalent.
     budgets: (nq,) int32 per-row block budgets actually applied.
+    live_counts: (batch, heads, nq) int32 number of live slots per row —
+      equals ``slot_mask.sum(-1)``.  The Pallas wrapper scalar-prefetches
+      this for its ragged finalize (the XLA executor still needs the mask
+      for partial-chunk masking).
     """
 
     indices: jnp.ndarray
     slot_mask: jnp.ndarray
     block_mask: jnp.ndarray
     budgets: jnp.ndarray
+    live_counts: Optional[jnp.ndarray] = None
+
+
+class RaggedSegment(NamedTuple):
+    """One segment of the budget-sorted ragged execution schedule.
+
+    rows: original query-block row ids, budget-descending; every row in the
+      segment needs the same number of slot chunks.
+    n_chunks: slot chunks this segment executes (ceil(max budget / chunk)).
+    """
+
+    rows: tuple
+    n_chunks: int
 
 
 def causal_block_mask(nq: int, nk: int) -> jnp.ndarray:
@@ -81,7 +108,7 @@ def select_blocks(
         mask.  The gather executors only need the index lists; building the
         mask costs a (b, h, nq, k_max, nk) one-hot scatter that GSPMD turns
         into enormous all-reduces at 32k scale, so the production path skips
-        it (§Perf glm4 iteration 1: 773 s -> see EXPERIMENTS.md).
+        it (§Perf glm4 iteration 1: 773 s -> see DESIGN.md §Perf notes).
 
     Returns:
       BlockSelection (block_mask=None when with_block_mask=False).
@@ -104,6 +131,7 @@ def select_blocks(
     slot_mask = live & within_budget[None, None, :, :]
 
     indices = jnp.where(slot_mask, indices, 0).astype(jnp.int32)
+    live_counts = slot_mask.sum(axis=-1, dtype=jnp.int32)
 
     block_mask = None
     if with_block_mask:
@@ -111,7 +139,58 @@ def select_blocks(
         onehot = jax.nn.one_hot(indices, nk, dtype=jnp.bool_)
         block_mask = jnp.any(onehot & slot_mask[..., None], axis=-2)
 
-    return BlockSelection(indices=indices, slot_mask=slot_mask, block_mask=block_mask, budgets=budgets)
+    return BlockSelection(
+        indices=indices,
+        slot_mask=slot_mask,
+        block_mask=block_mask,
+        budgets=budgets,
+        live_counts=live_counts,
+    )
+
+
+def revisit_indices(indices: jnp.ndarray, slot_mask: jnp.ndarray) -> jnp.ndarray:
+    """Re-point dead slots at the row's last live block ("revisit" trick).
+
+    Because live slots form a prefix, every dead slot repeats the index at
+    slot ``live_count - 1``; consecutive grid steps over dead slots then map
+    to the same K/V block, so the Pallas pipeline skips the DMA entirely
+    (splash-attention's revisit optimization).  Rows with zero live slots
+    keep pointing at block 0.
+
+    indices/slot_mask: (..., k_max) -> (..., k_max) int32.
+    """
+    k_max = indices.shape[-1]
+    cnt = slot_mask.sum(axis=-1, dtype=jnp.int32)
+    slot = jnp.minimum(
+        jnp.arange(k_max, dtype=jnp.int32),
+        jnp.maximum(cnt[..., None] - 1, 0),
+    )
+    return jnp.take_along_axis(indices, slot, axis=-1)
+
+
+def budget_sorted_segments(budgets: np.ndarray, slot_chunk: int) -> tuple:
+    """Static ragged execution schedule from the TPD budget vector.
+
+    Rows are sorted by budget (descending, stable) and coalesced into
+    segments whose rows all need the same number of ``slot_chunk``-wide
+    chunks; the ragged executor runs one scan per segment over exactly
+    ``n_chunks`` chunks, so all-dead trailing chunks of low-budget rows are
+    never executed.  Pure numpy — budgets are static per (config, shape), so
+    this resolves at trace time.
+
+    Returns a tuple of RaggedSegment.
+    """
+    budgets = np.asarray(budgets)
+    chunk = max(1, int(slot_chunk))
+    order = np.argsort(-budgets, kind="stable")
+    segments: list = []
+    for r in order:
+        c = max(1, -(-int(budgets[r]) // chunk))
+        if segments and segments[-1][1] == c:
+            segments[-1][0].append(int(r))
+        else:
+            segments.append(([int(r)], c))
+    return tuple(RaggedSegment(tuple(rows), c) for rows, c in segments)
 
 
 def block_mask_to_token_mask(
@@ -130,8 +209,12 @@ def block_mask_to_token_mask(
 
 def selection_density(sel: BlockSelection, nk: int) -> jnp.ndarray:
     """Realized budget: mean fraction of admissible key blocks attended.
-    Scalar in [0, 1] — comparable to the paper's BUD column."""
-    nq = sel.block_mask.shape[-2]
+    Scalar in [0, 1] — comparable to the paper's BUD column.
+
+    Computed from ``slot_mask`` (selected slots are distinct blocks, so the
+    count equals the block-mask popcount) — works on the production path
+    where ``with_block_mask=False`` and ``block_mask`` is None."""
+    nq = sel.slot_mask.shape[-2]
     admissible = causal_block_mask(nq, nk).sum()
-    kept = sel.block_mask.sum(axis=(-1, -2)).mean()
+    kept = sel.slot_mask.sum(axis=(-1, -2)).mean()
     return kept / admissible

@@ -7,12 +7,17 @@ Pipeline per (batch, head):
      (selection.py),
   4. exact attention over the selected blocks only.
 
-Three executors:
+Three executors (DESIGN.md describes the contract in detail):
   * "xla"    — gather-based flash-style executor in pure jnp.  This is the
                path lowered in the distributed dry-run; it is mathematically
-               identical to the Pallas kernel.
+               identical to the Pallas kernel.  With ``cfg.ragged`` it runs
+               a budget-sorted segment schedule so cost tracks the *average*
+               TPD budget instead of the padded k_max, and with GQA-shared
+               selection it fetches each K/V block once per KV head.
   * "pallas" — TPU kernel (kernels/block_sparse_attn.py) driven by the same
-               selection indices via scalar prefetch.
+               selection indices via scalar prefetch; dead slots revisit the
+               previous K/V block (zero new DMAs) and rows finalize at their
+               own live count.
   * "dense"  — O(N^2) masked oracle for tests.
 """
 from __future__ import annotations
@@ -22,6 +27,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import metric as metric_lib
 from repro.core import schedule as schedule_lib
@@ -161,12 +167,32 @@ def _gather_executor(
     block_size: int,
     scale: float,
     slot_chunk: int,
+    budgets: Optional[np.ndarray] = None,
+    group_dedup: bool = False,
 ) -> jnp.ndarray:
     """Flash-style sparse executor: per query-block row, stream the selected
     key/value blocks in chunks with an online-softmax accumulator.
 
-    q: (b, hq, sq, d); k, v: (b, hk, sk, d);
-    indices/slot_mask: (b, hq, nq, k_max).
+    The executor folds (head-in-group, query-block) pairs into a single
+    "row" axis per KV head, so one code path covers both layouts:
+
+      * ``group_dedup=False`` — indices/slot_mask are per query head,
+        (b, hq, nq, k_max); rows = group * nq, each with a (block_q, d)
+        query tile.
+      * ``group_dedup=True`` — selection is shared across the query heads
+        of each KV group (``cfg.group_reduce != "none"``), so indices are
+        (b, hk, nq, k_max); rows = nq with a fused (group * block_q, d)
+        query tile.  Each K/V block is gathered once per *KV head*, cutting
+        gather traffic by the group factor.
+
+    ``budgets`` (static numpy, per query-block row) enables the ragged
+    schedule: rows are budget-sorted and segmented (selection.
+    budget_sorted_segments) and each segment scans only the slot chunks its
+    rows actually use — the chunk-level early-out that makes cost track the
+    average TPD budget instead of k_max.  ``budgets=None`` runs the padded
+    schedule (every row pays ceil(k_max / slot_chunk) chunks).
+
+    q: (b, hq, sq, d); k, v: (b, hk, sk, d).
     """
     b, hq, sq, d = q.shape
     _, hk, sk, _ = k.shape
@@ -183,53 +209,104 @@ def _gather_executor(
         slot_mask = jnp.pad(slot_mask, ((0, 0), (0, 0), (0, 0), (0, pad)))
     n_chunks = (k_max + pad) // chunk
 
-    qb = q.reshape(b, hk, group, nq, bs, d).astype(jnp.float32) * scale
     kb = k.reshape(b, hk, nk, bs, d)
     vb = v.reshape(b, hk, nk, bs, dv)
     # Pin K/V blocks to (batch, heads) sharding: if a seq-sharded layout
     # propagates in (e.g. from a kv_seq-sharded cache output), GSPMD cannot
     # partition the data-dependent block gather and emits a full masked
     # all-reduce of the gathered tensor (34 GB/layer at glm4-9b 32k —
-    # §Perf glm4 iteration 2).
+    # §Perf glm4 iteration 2, DESIGN.md).
     kb = constrain(kb, ("batch", "kv_heads", None, None, None))
     vb = constrain(vb, ("batch", "kv_heads", None, None, None))
-    idx = indices.reshape(b, hk, group, nq, n_chunks, chunk)
-    smask = slot_mask.reshape(b, hk, group, nq, n_chunks, chunk)
 
     offset = sk - sq  # 0 for self-attention prefill/train
-    q_pos = offset + jnp.arange(sq).reshape(nq, bs)  # global query positions
+    q_pos = offset + np.arange(sq).reshape(nq, bs)  # global query positions
 
-    def body(carry, c):
-        acc, m, l = carry
-        idx_c = jax.lax.dynamic_index_in_dim(idx, c, axis=4, keepdims=False)
-        msk_c = jax.lax.dynamic_index_in_dim(smask, c, axis=4, keepdims=False)
-        # Gather the selected key/value blocks: (b, hk, g, nq, chunk, bs, d).
-        gidx = idx_c[..., None, None]
-        k_c = jnp.take_along_axis(kb[:, :, None, None], gidx, axis=4)
-        v_c = jnp.take_along_axis(vb[:, :, None, None], gidx, axis=4)
-        # Scores: (b, hk, g, nq, bs_q, chunk, bs_k).
-        s = jnp.einsum("bhgnqd,bhgnckd->bhgnqck", qb, k_c.astype(jnp.float32))
-        # Token-level causal mask (exact on diagonal blocks) + slot validity.
-        k_pos = idx_c[..., None] * bs + jnp.arange(bs)  # (b,hk,g,nq,chunk,bs)
-        keep = k_pos[..., None, :, :] <= q_pos[None, None, None, :, :, None, None]
-        keep = keep & msk_c[..., None, :, None]
-        s = jnp.where(keep, s, NEG_INF)
-        # Online softmax update.
-        s_max = s.max(axis=(-1, -2))                      # (b,hk,g,nq,bs_q)
-        m_new = jnp.maximum(m, s_max)
-        corr = jnp.exp(m - m_new)
-        p = jnp.exp(s - m_new[..., None, None])
-        p = jnp.where(keep, p, 0.0)
-        l_new = l * corr + p.sum(axis=(-1, -2))
-        pv = jnp.einsum("bhgnqck,bhgnckd->bhgnqd", p, v_c.astype(jnp.float32))
-        acc_new = acc * corr[..., None] + pv
-        return (acc_new, m_new, l_new), None
+    qg = q.reshape(b, hk, group, nq, bs, d)
+    if group_dedup:
+        # Rows = query-block rows; fused (group * bs) query tile per row.
+        qrows = qg.transpose(0, 1, 3, 2, 4, 5).reshape(b, hk, nq, group * bs, d)
+        idx = indices
+        msk = slot_mask
+        q_pos_rows = np.tile(q_pos, (1, group))            # (nq, group*bs)
+        row_budgets = budgets
+    else:
+        # Rows = (head-in-group, query-block) pairs, plain (bs) query tile.
+        qrows = qg.reshape(b, hk, group * nq, bs, d)
+        idx = indices.reshape(b, hk, group * nq, -1)
+        msk = slot_mask.reshape(b, hk, group * nq, -1)
+        q_pos_rows = np.tile(q_pos, (group, 1))            # (group*nq, bs)
+        row_budgets = None if budgets is None else np.tile(budgets, group)
+    qrows = qrows.astype(jnp.float32) * scale
+    q_pos_rows = jnp.asarray(q_pos_rows)
 
-    acc0 = jnp.zeros((b, hk, group, nq, bs, dv), jnp.float32)
-    m0 = jnp.full((b, hk, group, nq, bs), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, hk, group, nq, bs), jnp.float32)
-    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(n_chunks))
-    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    def run_rows(q_r, pos_r, idx_r, msk_r, seg_chunks):
+        """Online-softmax scan over ``seg_chunks`` slot chunks for one row
+        set: q_r (b, hk, R, Bq, d); idx_r/msk_r (b, hk, R, seg_chunks*chunk).
+        """
+        R, Bq = q_r.shape[2], q_r.shape[3]
+        idx_s = idx_r.reshape(b, hk, R, seg_chunks, chunk)
+        msk_s = msk_r.reshape(b, hk, R, seg_chunks, chunk)
+
+        def body(carry, c):
+            acc, m, l = carry
+            idx_c = jax.lax.dynamic_index_in_dim(idx_s, c, axis=3, keepdims=False)
+            msk_c = jax.lax.dynamic_index_in_dim(msk_s, c, axis=3, keepdims=False)
+            # Gather selected key/value blocks once per KV head:
+            # (b, hk, R, chunk, bs, d).
+            gidx = idx_c[..., None, None]
+            k_c = jnp.take_along_axis(kb[:, :, None], gidx, axis=3)
+            v_c = jnp.take_along_axis(vb[:, :, None], gidx, axis=3)
+            # Scores: (b, hk, R, Bq, chunk, bs_k).
+            s = jnp.einsum("bhrqd,bhrckd->bhrqck", q_r, k_c.astype(jnp.float32))
+            # Token-level causal mask (exact on diagonal blocks) + validity.
+            k_pos = idx_c[..., None] * bs + jnp.arange(bs)   # (b,hk,R,chunk,bs)
+            keep = k_pos[:, :, :, None] <= pos_r[None, None, :, :, None, None]
+            keep = keep & msk_c[:, :, :, None, :, None]
+            s = jnp.where(keep, s, NEG_INF)
+            # Online softmax update.
+            s_max = s.max(axis=(-1, -2))                     # (b, hk, R, Bq)
+            m_new = jnp.maximum(m, s_max)
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None, None])
+            p = jnp.where(keep, p, 0.0)
+            l_new = l * corr + p.sum(axis=(-1, -2))
+            pv = jnp.einsum("bhrqck,bhrckd->bhrqd", p, v_c.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hk, R, Bq, dv), jnp.float32)
+        m0 = jnp.full((b, hk, R, Bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, R, Bq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(seg_chunks))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    if row_budgets is None:
+        out_rows = run_rows(qrows, q_pos_rows, idx, msk, n_chunks)
+    else:
+        # Ragged schedule: budget-sorted segments, each scanning only the
+        # chunks its rows need.  All indexing below is static numpy, so each
+        # segment lowers to its own (smaller) fused scan.
+        segments = selection_lib.budget_sorted_segments(row_budgets, chunk)
+        outs = []
+        for seg in segments:
+            rows = np.asarray(seg.rows)
+            n_slots = min(seg.n_chunks, n_chunks) * chunk
+            outs.append(run_rows(
+                jnp.take(qrows, rows, axis=2),
+                jnp.take(q_pos_rows, rows, axis=0),
+                jnp.take(idx, rows, axis=2)[..., :n_slots],
+                jnp.take(msk, rows, axis=2)[..., :n_slots],
+                min(seg.n_chunks, n_chunks),
+            ))
+        inv = np.argsort(np.concatenate([np.asarray(s.rows) for s in segments]))
+        out_rows = jnp.take(jnp.concatenate(outs, axis=2), inv, axis=2)
+
+    if group_dedup:
+        out = out_rows.reshape(b, hk, nq, group, bs, dv)
+        out = out.transpose(0, 1, 3, 2, 4, 5)
+    else:
+        out = out_rows.reshape(b, hk, group, nq, bs, dv)
     return out.reshape(b, hq, sq, dv).astype(q.dtype)
 
 
@@ -282,8 +359,19 @@ def stem_attention(
     sk = k.shape[2]
     scale = d ** -0.5
     nk = sk // cfg.block_size
-    need_mask = cfg.backend == "dense" or return_stats
+    # selection_density works from slot_mask, so stats no longer force the
+    # dense block-mask scatter onto the production path.
+    need_mask = cfg.backend == "dense"
     sel, k_max = select_for(q, k, v, cfg, with_block_mask=need_mask)
+
+    # GQA block dedup: with group-shared selection every query head of a KV
+    # group picks identical blocks, so the executors only need the indices
+    # of one head per group (DESIGN.md §GQA dedup invariant).
+    group = hq // k.shape[1]
+    dedup = cfg.ragged and cfg.group_reduce != "none" and group > 1
+    idx, msk, cnt = sel.indices, sel.slot_mask, sel.live_counts
+    if dedup:
+        idx, msk, cnt = idx[:, ::group], msk[:, ::group], cnt[:, ::group]
 
     if cfg.backend == "dense":
         token_mask = selection_lib.block_mask_to_token_mask(
@@ -291,16 +379,21 @@ def stem_attention(
         )
         out = dense_attention(q, k, v, causal=True, scale=scale, mask=token_mask)
     elif cfg.backend == "xla":
+        # TPD budgets are static per (cfg, shape) — recompute in numpy so
+        # the ragged segment schedule resolves at trace time.
+        budgets_np = schedule_lib.schedule_for(cfg, sq, sk) if cfg.ragged else None
         out = _gather_executor(
-            q, k, v, sel.indices, sel.slot_mask,
+            q, k, v, idx, msk,
             block_size=cfg.block_size, scale=scale, slot_chunk=cfg.slot_chunk,
+            budgets=budgets_np, group_dedup=dedup,
         )
     elif cfg.backend == "pallas":
         from repro.kernels import ops as kernel_ops  # deferred: optional dep
 
         out = kernel_ops.block_sparse_attention(
-            q, k, v, sel.indices, sel.slot_mask,
-            block_size=cfg.block_size, scale=scale,
+            q, k, v, idx, msk,
+            block_size=cfg.block_size, scale=scale, group_dedup=dedup,
+            live_counts=cnt,
         )
     else:  # pragma: no cover - config validates
         raise ValueError(cfg.backend)

@@ -23,10 +23,12 @@ def flash_attention(q, k, v, *, block_q=128, block_k=128, scale=None):
     )
 
 
-def block_sparse_attention(q, k, v, indices, slot_mask, *, block_size=128, scale=None):
+def block_sparse_attention(q, k, v, indices, slot_mask, *, block_size=128, scale=None,
+                           group_dedup=False, live_counts=None):
     return _bsa.block_sparse_attention(
         q, k, v, indices, slot_mask,
         block_size=block_size, scale=scale, interpret=INTERPRET,
+        group_dedup=group_dedup, live_counts=live_counts,
     )
 
 

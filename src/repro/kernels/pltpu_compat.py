@@ -1,0 +1,12 @@
+"""Version shims for ``jax.experimental.pallas.tpu``.
+
+The TPU compiler-params dataclass was renamed ``TPUCompilerParams`` ->
+``CompilerParams`` across JAX releases; resolve whichever this JAX ships.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:  # pragma: no cover - depends on installed jax
+    CompilerParams = pltpu.TPUCompilerParams

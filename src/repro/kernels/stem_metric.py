@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pltpu_compat
+
 
 def _pool_kernel(x_ref, o_ref, *, block_size: int, stride: int):
     x = x_ref[0, ...].astype(jnp.float32)           # (block, d)
@@ -43,7 +45,7 @@ def antidiag_pool(
         in_specs=[pl.BlockSpec((1, block_size, d), lambda bh, i: (bh, i, 0))],
         out_specs=pl.BlockSpec((1, 1, stride, d), lambda bh, i: (bh, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, nb, stride, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
@@ -72,7 +74,7 @@ def value_magnitude(
         in_specs=[pl.BlockSpec((1, block_size, d), lambda bh, i: (bh, i, 0))],
         out_specs=pl.BlockSpec((1, 1, 1), lambda bh, i: (bh, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, nb, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -1,0 +1,58 @@
+"""Fixed-seed fallback for ``hypothesis`` (see requirements-dev.txt).
+
+When hypothesis is installed the property tests use it directly; when it is
+absent (e.g. the minimal CI image) this module provides API-compatible
+``given`` / ``settings`` / ``st`` shims that degrade each property test to a
+deterministic, fixed-seed parametrized sample — the properties still run,
+just over 25 pseudo-random cases instead of an adaptive search.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+N_EXAMPLES = 25
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def _floats(lo: float, hi: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+class st:
+    """Namespace mimicking ``hypothesis.strategies`` (the subset we use)."""
+
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Parametrize over N_EXAMPLES fixed-seed draws from the strategies."""
+    names = list(strategies)
+
+    def deco(fn):
+        rng = random.Random(_SEED)
+        cases = [
+            tuple(strategies[n].draw(rng) for n in names)
+            for _ in range(N_EXAMPLES)
+        ]
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+    return deco

@@ -1,7 +1,11 @@
 """Property tests for the Token Position-Decay schedule (Eq. 2/3/4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to fixed-seed parametrized sampling
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import config as config_lib
 from repro.core import schedule

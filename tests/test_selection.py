@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to fixed-seed parametrized sampling
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import selection as sel_lib
 
