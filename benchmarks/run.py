@@ -12,6 +12,8 @@ accuracy benchmarks).  Mapping to the paper:
   roofline.py             EXPERIMENTS.md roofline collation (from dry-run)
   ragged_exec.py          padded vs ragged/deduped executor A/B (DESIGN.md;
                           also writes BENCH_ragged.json standalone)
+  serving.py              continuous-batching engine A/B, stem-on vs
+                          stem-off (writes BENCH_serving.json standalone)
 """
 from __future__ import annotations
 
@@ -22,12 +24,13 @@ import traceback
 def main() -> None:
     from benchmarks import (ablation, cost_model, latency, oam_vs_sam,
                             position_sensitivity, ragged_exec, roofline,
-                            sensitivity)
+                            sensitivity, serving)
 
     modules = [
         ("cost_model", cost_model),
         ("latency", latency),
         ("ragged_exec", ragged_exec),
+        ("serving", serving),
         ("oam_vs_sam", oam_vs_sam),
         ("ablation", ablation),
         ("sensitivity", sensitivity),

@@ -1,0 +1,154 @@
+"""Serving A/B: continuous-batching engine throughput, stem-on vs stem-off.
+
+Drives the engine (``runtime/engine.py``) with a mixed-length,
+staggered-arrival trace at batch (max_slots) {4, 16} and measures
+end-to-end tokens/sec plus p50/p95 per-token decode latency for the
+Stem-sparse arm (``budget_frac < 1``) against the dense-equivalent arm
+(``budget_frac = 1.0``) on the *same* paged cache and trace — the
+comparison isolates what OAM page selection buys at serving time.
+
+Writes ``BENCH_serving.json`` so CI keeps a serving-perf trajectory across
+PRs (next to ``BENCH_ragged.json``).
+
+Standalone: ``PYTHONPATH=src python benchmarks/serving.py [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.config import StemConfig
+
+QUICK_ARCH = ArchConfig(
+    name="serve-bench-quick", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    qk_norm=True, dtype="float32",
+)
+FULL_ARCH = ArchConfig(
+    name="serve-bench", family="dense", num_layers=6, d_model=128,
+    num_heads=4, num_kv_heads=2, head_dim=32, d_ff=384, vocab_size=512,
+    qk_norm=True, dtype="float32",
+)
+
+STEM_BUDGET = 0.25          # the stem-on arm's budget_frac
+
+
+def _stem_cfg(quick: bool) -> StemConfig:
+    return StemConfig(block_size=16 if quick else 32, sink_blocks=1,
+                      local_blocks=1, min_budget_blocks=2,
+                      stride=4 if quick else 8)
+
+
+def run_arm(bundle, params, stem_cfg: StemConfig, *, max_slots: int,
+            budget_frac: float, min_prompt: int, max_prompt: int,
+            decode_tokens: int, seed: int = 0) -> dict:
+    """One (batch size, budget) cell: fresh engine, fresh trace, timed run."""
+    from repro.launch.serve import _latency_stats, build_trace
+    from repro.runtime.engine import EngineConfig, StemEngine
+
+    ecfg = EngineConfig.for_trace(
+        max_slots=max_slots, max_prompt=max_prompt,
+        max_new_tokens=decode_tokens, page_size=stem_cfg.block_size,
+        budget_frac=budget_frac)
+    engine = StemEngine(bundle, params, stem_cfg, ecfg)
+    mk_trace = lambda: build_trace(
+        np.random.RandomState(seed), 2 * max_slots, min_prompt, max_prompt,
+        decode_tokens, bundle.cfg.vocab_size, arrival_every=1)
+
+    # Warmup pass with an identical trace: compiles the decode step and
+    # every prefill prompt-length bucket, so the timed pass below measures
+    # steady-state serving, not XLA compilation.
+    engine.run(mk_trace())
+    engine.reset_metrics()
+
+    trace = mk_trace()
+    for r in trace:                 # preserve the staggered arrival pattern
+        r.arrival_step += engine.step_count
+    t0 = time.perf_counter()
+    finished = engine.run(trace)
+    wall = time.perf_counter() - t0
+    total_tokens = sum(len(f.tokens) for f in finished)
+    return {
+        "max_slots": max_slots,
+        "budget_frac": budget_frac,
+        "requests": len(finished),
+        "total_tokens": total_tokens,
+        "wall_s": wall,
+        "throughput_tok_s": total_tokens / max(wall, 1e-9),
+        "ttft_ms_mean": float(np.mean([f.ttft_s for f in finished]) * 1e3),
+        "max_concurrency": engine.stats["max_concurrency"],
+        "slots_reused": engine.stats["slots_reused"],
+        **_latency_stats(finished),
+    }
+
+
+def run_bench(quick: bool) -> dict:
+    import jax
+    from repro.models import registry
+
+    cfg = QUICK_ARCH if quick else FULL_ARCH
+    stem_cfg = _stem_cfg(quick)
+    bundle = registry.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    min_prompt, max_prompt = (24, 96) if quick else (64, 384)
+    decode_tokens = 8 if quick else 32
+
+    cells = []
+    for max_slots in (4, 16):
+        for budget_frac in (1.0, STEM_BUDGET):      # stem-off, stem-on
+            cell = run_arm(bundle, params, stem_cfg, max_slots=max_slots,
+                           budget_frac=budget_frac, min_prompt=min_prompt,
+                           max_prompt=max_prompt, decode_tokens=decode_tokens)
+            arm = "dense" if budget_frac == 1.0 else "stem"
+            print(f"slots={max_slots:>2} {arm:>5}: "
+                  f"{cell['throughput_tok_s']:8.1f} tok/s, per-token "
+                  f"p50 {cell['p50_ms']:.2f} / p95 {cell['p95_ms']:.2f} ms, "
+                  f"TTFT {cell['ttft_ms_mean']:.1f} ms", flush=True)
+            cells.append(cell)
+    return {
+        "benchmark": "serving",
+        "mode": "quick" if quick else "full",
+        "backend": jax.default_backend(),
+        "arch": cfg.name,
+        "block_size": stem_cfg.block_size,
+        "stem_budget_frac": STEM_BUDGET,
+        "decode_tokens": decode_tokens,
+        "prompt_range": [min_prompt, max_prompt],
+        "cells": cells,
+    }
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py entry point: CSV rows per (slots, arm) cell."""
+    report = run_bench(quick)
+    rows = []
+    for c in report["cells"]:
+        arm = "dense" if c["budget_frac"] == 1.0 else "stem"
+        rows.append((
+            f"serving/slots{c['max_slots']}/{arm}",
+            c["p50_ms"] * 1e3,
+            f"tok_s={c['throughput_tok_s']:.1f};p95_ms={c['p95_ms']:.2f};"
+            f"ttft_ms={c['ttft_ms_mean']:.1f}",
+        ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2-layer model, short prompts")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+
+    report = run_bench(args.quick)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

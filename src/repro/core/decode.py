@@ -14,13 +14,22 @@ naturally because prefill already computes the block-pooled representations:
     selected blocks only.
 
 This turns decode attention from O(L) per token to O(k_avg * B) — the same
-coarse-to-fine shape as Algorithm 1 with nq = 1.  Exposed as
-``sparse_decode_attention`` and benchmarked in tests against full-cache
-decode for selection quality.
+coarse-to-fine shape as Algorithm 1 with nq = 1.
+
+Everything is vectorized over *per-sequence* cache lengths: ``cache_lens``
+may be a scalar (uniform batch, the seed behaviour) or a ``(b,)`` vector
+(continuous batching — every row carries its own valid prefix, lengths need
+not be multiples of ``block_size``).  The pipeline is factored into three
+stages shared with the paged-cache executor (``runtime/paged.py``):
+
+  ``decode_block_metric``  — OAM score of the query vs every cache block;
+  ``select_decode_blocks`` — per-row budget + validity + forced floors,
+                             static-width top-k;
+  ``attend_selected``      — exact masked attention over gathered blocks.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +40,10 @@ from repro.core import selection as selection_lib
 from repro.core.config import StemConfig
 
 NEG_INF = -1e30
+# summarize_cache() of an all-zero block yields this v_mag (log of the norm
+# floor); fresh/partial pages are initialized to it so incremental appends
+# reproduce the batch summary exactly.
+V_MAG_FLOOR = float(np.log(1e-20))
 
 
 class BlockSummary(NamedTuple):
@@ -47,75 +60,158 @@ def summarize_cache(k: jnp.ndarray, v: jnp.ndarray, cfg: StemConfig) -> BlockSum
     )
 
 
-def sparse_decode_attention(
-    q: jnp.ndarray,           # (b, hq, 1, d) — one new query token
-    cache_k: jnp.ndarray,     # (b, hk, L, d)
-    cache_v: jnp.ndarray,
-    summary: BlockSummary,
-    cache_len: jnp.ndarray,   # scalar int32 — valid prefix of the cache
-    cfg: StemConfig,
-    budget_frac: float = 0.25,
-) -> jnp.ndarray:
-    """OAM block selection + exact attention over selected cache blocks.
+# ---------------------------------------------------------------------------
+# Stage 1: coarse metric — single query row vs all cache blocks
+# ---------------------------------------------------------------------------
 
-    The top-k width is capped at a *static* bound derived from
-    ``budget_frac`` + the stability floors, so the block gather moves
-    O(k_avg * B) cache tokens per step instead of the whole cache.
+def decode_block_metric(q: jnp.ndarray, k_groups: jnp.ndarray,
+                        v_mag: jnp.ndarray, cfg: StemConfig) -> jnp.ndarray:
+    """OAM at block granularity for one decode query per sequence.
+
+    q: (b, hq, 1, d); k_groups: (b, hk, n, stride, d); v_mag: (b, hk, n).
+    Returns (b, hk, group, n) float32 — higher = more important.
     """
     b, hq, _, d = q.shape
-    hk = cache_k.shape[1]
+    hk = k_groups.shape[1]
     group = hq // hk
-    bs = cfg.block_size
-    nblk = cache_k.shape[2] // bs
-
-    # --- coarse metric: single query row vs all cache blocks -------------
-    # Pool the query alone (stride groups of one position = the query).
     qg = q.reshape(b, hk, group, 1, d).astype(jnp.float32)
-    kg = summary.k_groups.astype(jnp.float32)                    # (b,hk,n,s,d)
+    kg = k_groups.astype(jnp.float32)
     # mean over groups == block mean-logit approximation for one query
     route = jnp.einsum("bhgqd,bhnsd->bhgqn", qg, kg) / (
         kg.shape[-2] * jnp.sqrt(jnp.asarray(d, jnp.float32)))
     route = route[:, :, :, 0]                                    # (b,hk,g,n)
-    m = route + cfg.beta * jnp.maximum(summary.v_mag, 0.0)[:, :, None, :]
+    return route + cfg.beta * jnp.maximum(v_mag, 0.0)[:, :, None, :]
 
-    # --- budget + validity ------------------------------------------------
-    n_valid = (cache_len + bs - 1) // bs
-    k_budget = jnp.maximum(
-        jnp.int32(cfg.min_budget_blocks),
-        (n_valid * budget_frac).astype(jnp.int32))
-    blk = jnp.arange(nblk)
-    is_valid = blk < n_valid
-    is_sink = blk < cfg.sink_blocks
-    is_local = (blk >= n_valid - cfg.local_blocks) & is_valid
-    biased = jnp.where(is_sink | is_local, m + selection_lib.FORCE_BONUS, m)
-    biased = jnp.where(is_valid, biased, NEG_INF)
 
-    # Static budget bound so the gather below is O(k_avg * B), not O(L):
-    # the dynamic k_budget never exceeds ceil(nblk * budget_frac) +
-    # min_budget_blocks, and the forced sink/local floors ride on top (they
-    # carry FORCE_BONUS, so they occupy the leading top-k slots).
+# ---------------------------------------------------------------------------
+# Stage 2: per-row budget + static-width top-k selection
+# ---------------------------------------------------------------------------
+
+class DecodeSelection(NamedTuple):
+    """Per-row cache-block selection for one decode step.
+
+    indices: (b, hk, g, k_max) int32 *logical* block ids (slot-local order);
+      dead slots are masked by ``live``.
+    live: (b, hk, g, k_max) bool — slot carries a selected, in-budget,
+      valid block.
+    budgets: (b,) int32 per-row block budget actually applied.
+    n_valid: (b,) int32 ceil(cache_len / block_size) per row.
+    """
+
+    indices: jnp.ndarray
+    live: jnp.ndarray
+    budgets: jnp.ndarray
+    n_valid: jnp.ndarray
+
+
+def decode_budget_bound(nblk: int, cfg: StemConfig, budget_frac: float) -> int:
+    """Static top-k width: the dynamic per-row budget never exceeds
+    ceil(nblk * budget_frac) + min_budget_blocks, and the forced sink/local
+    floors ride on top (they carry FORCE_BONUS, so they occupy the leading
+    top-k slots).  Keeps the block gather O(k_avg * B), not O(L)."""
     k_max = min(
         nblk,
         int(np.ceil(nblk * budget_frac)) + cfg.min_budget_blocks
         + cfg.sink_blocks + cfg.local_blocks,
     )
-    k_max = max(k_max, 1)
-    vals, idx = jax.lax.top_k(biased, k_max)                     # (b,hk,g,n)
-    live = (vals > NEG_INF / 2) & (jnp.arange(k_max) < k_budget)
+    return max(k_max, 1)
 
-    # --- exact attention over selected blocks -----------------------------
-    dv = cache_v.shape[-1]
-    kb = cache_k.reshape(b, hk, nblk, bs, d)
-    vb = cache_v.reshape(b, hk, nblk, bs, dv)
-    # gather along the block axis (3 after the g broadcast dim is inserted)
-    gk = jnp.take_along_axis(kb[:, :, None], idx[..., None, None], axis=3)
-    gv = jnp.take_along_axis(vb[:, :, None], idx[..., None, None], axis=3)
+
+def select_decode_blocks(
+    m: jnp.ndarray,                       # (b, hk, g, nblk) coarse metric
+    cache_lens: jnp.ndarray,              # scalar or (b,) valid prefix
+    cfg: StemConfig,
+    budget_frac: float = 0.25,
+) -> DecodeSelection:
+    """TPD-style budget + forced sink/local floors, vectorized per row."""
+    b, _, _, nblk = m.shape
+    bs = cfg.block_size
+    cache_lens = jnp.broadcast_to(jnp.asarray(cache_lens, jnp.int32), (b,))
+
+    n_valid = (cache_lens + bs - 1) // bs                        # (b,)
+    # forced sink/local floors ride on top of the budget: the per-row union
+    # of sink + local blocks is min(n_valid, sink + local) wide, and every
+    # forced block must stay live regardless of budget_frac.
+    n_forced = jnp.minimum(
+        n_valid, jnp.int32(cfg.sink_blocks + cfg.local_blocks))
+    k_budget = jnp.maximum(
+        jnp.maximum(jnp.int32(cfg.min_budget_blocks), n_forced),
+        (n_valid * budget_frac).astype(jnp.int32))               # (b,)
+    blk = jnp.arange(nblk)
+    is_valid = blk[None, :] < n_valid[:, None]                   # (b, n)
+    is_sink = blk < cfg.sink_blocks                              # (n,)
+    is_local = (blk[None, :] >= n_valid[:, None] - cfg.local_blocks) & is_valid
+    forced = (is_sink[None, :] | is_local)[:, None, None, :]     # (b,1,1,n)
+    biased = jnp.where(forced, m + selection_lib.FORCE_BONUS, m)
+    biased = jnp.where(is_valid[:, None, None, :], biased, NEG_INF)
+
+    k_max = decode_budget_bound(nblk, cfg, budget_frac)
+    vals, idx = jax.lax.top_k(biased, k_max)                     # (b,hk,g,kmax)
+    live = (vals > NEG_INF / 2) & (
+        jnp.arange(k_max)[None, None, None, :] < k_budget[:, None, None, None])
+    return DecodeSelection(indices=idx.astype(jnp.int32), live=live,
+                           budgets=k_budget, n_valid=n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: exact attention over gathered blocks
+# ---------------------------------------------------------------------------
+
+def attend_selected(
+    q: jnp.ndarray,            # (b, hq, 1, d)
+    gk: jnp.ndarray,           # (b, hk, g, k_max, bs, d) gathered key blocks
+    gv: jnp.ndarray,           # (b, hk, g, k_max, bs, dv)
+    sel: DecodeSelection,
+    cache_lens: jnp.ndarray,   # scalar or (b,)
+    block_size: int,
+) -> jnp.ndarray:
+    """Masked softmax over the selected blocks only.  Returns (b, hq, 1, dv)."""
+    b, hq, _, d = q.shape
+    hk = gk.shape[1]
+    group = hq // hk
+    bs = block_size
+    cache_lens = jnp.broadcast_to(jnp.asarray(cache_lens, jnp.int32), (b,))
+    qg = q.reshape(b, hk, group, 1, d).astype(jnp.float32)
     s = jnp.einsum("bhgqd,bhgnkd->bhgqnk", qg, gk.astype(jnp.float32))
-    s = s * (d ** -0.5)                                          # (b,hk,g,1,n,bs)
-    tok_pos = idx[..., None] * bs + jnp.arange(bs)               # (b,hk,g,n,bs)
-    keep = (tok_pos < cache_len) & live[..., None]
+    s = s * (d ** -0.5)                                    # (b,hk,g,1,kmax,bs)
+    tok_pos = sel.indices[..., None] * bs + jnp.arange(bs)  # (b,hk,g,kmax,bs)
+    keep = (tok_pos < cache_lens[:, None, None, None, None]) & sel.live[..., None]
     s = jnp.where(keep[:, :, :, None], s, NEG_INF)
     p = jax.nn.softmax(s.reshape(b, hk, group, 1, -1), axis=-1).reshape(s.shape)
     p = jnp.where(keep[:, :, :, None], p, 0.0)
     o = jnp.einsum("bhgqnk,bhgnkd->bhgqd", p, gv.astype(jnp.float32))
-    return o.reshape(b, hq, 1, dv).astype(q.dtype)
+    return o.reshape(b, hq, 1, gv.shape[-1]).astype(q.dtype)
+
+
+def sparse_decode_attention(
+    q: jnp.ndarray,           # (b, hq, 1, d) — one new query token
+    cache_k: jnp.ndarray,     # (b, hk, L, d)
+    cache_v: jnp.ndarray,
+    summary: BlockSummary,
+    cache_lens: Union[jnp.ndarray, int],   # scalar or (b,) valid prefixes
+    cfg: StemConfig,
+    budget_frac: float = 0.25,
+) -> jnp.ndarray:
+    """OAM block selection + exact attention over selected cache blocks.
+
+    ``cache_lens`` is per-sequence: a scalar applies one length to every
+    row; a ``(b,)`` vector gives each row its own valid prefix (lengths not
+    multiples of ``block_size`` are handled by token-level masking of the
+    partial block).  At ``budget_frac=1.0`` every valid block is selected,
+    so the result equals dense decode over each row's prefix exactly.
+    """
+    b, hq, _, d = q.shape
+    hk = cache_k.shape[1]
+    bs = cfg.block_size
+    nblk = cache_k.shape[2] // bs
+
+    m = decode_block_metric(q, summary.k_groups, summary.v_mag, cfg)
+    sel = select_decode_blocks(m, cache_lens, cfg, budget_frac)
+
+    dv = cache_v.shape[-1]
+    kb = cache_k.reshape(b, hk, nblk, bs, d)
+    vb = cache_v.reshape(b, hk, nblk, bs, dv)
+    # gather along the block axis (3 after the g broadcast dim is inserted)
+    gk = jnp.take_along_axis(kb[:, :, None], sel.indices[..., None, None], axis=3)
+    gv = jnp.take_along_axis(vb[:, :, None], sel.indices[..., None, None], axis=3)
+    return attend_selected(q, gk, gv, sel, cache_lens, bs)

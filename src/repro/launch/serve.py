@@ -1,13 +1,22 @@
-"""Serving driver: Stem-accelerated prefill + batched decode.
+"""Serving driver: continuous batching over the paged Stem KV cache.
 
-Models the paper's deployment story: the pre-filling phase (the paper's
-target) runs Stem block-sparse attention; decode then streams tokens from
-the populated caches.  Requests are processed as a fixed batch (continuous
-batching is out of scope; the step functions are compatible with it).
+Models the paper's deployment story end-to-end: Stem-accelerated prefill
+writes each request's K/V pages + block summaries into the shared page
+pool, and decode streams tokens with OAM page selection per step.  Requests
+carry *mixed prompt lengths* and *staggered arrivals*; the engine
+(``runtime/engine.py``) admits them into slots as capacity frees up and
+recycles slots on completion — no uniform-batch assumption anywhere.
+
+Two modes:
+  * default — the continuous-batching engine on the paged cache;
+  * ``--fixed-batch`` — the legacy one-shot batch, but ragged: per-request
+    prompt lengths are right-padded, per-sequence ``cache_lens`` flow
+    through ``make_serve_step``, and every row decodes at its own length.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \\
-      --prompt-len 256 --decode-tokens 32 --batch 4 --stem
+      --requests 6 --min-prompt 48 --max-prompt 200 --decode-tokens 16 \\
+      --max-slots 4 --stem
 """
 from __future__ import annotations
 
@@ -17,74 +26,175 @@ import time
 import numpy as np
 
 
+def build_trace(rng: np.random.RandomState, n_requests: int, min_prompt: int,
+                max_prompt: int, decode_tokens: int, vocab: int,
+                arrival_every: int):
+    """Mixed-length, staggered-arrival request trace."""
+    from repro.runtime.engine import Request
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.randint(min_prompt, max_prompt + 1))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.randint(0, vocab, size=(plen,)).astype(np.int32),
+            max_new_tokens=decode_tokens,
+            arrival_step=i * arrival_every,
+        ))
+    return reqs
+
+
+def _latency_stats(finished):
+    lats = np.asarray([t for f in finished for t in f.token_latencies_s])
+    if lats.size == 0:
+        return {"p50_ms": 0.0, "p95_ms": 0.0}
+    return {"p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "p95_ms": float(np.percentile(lats, 95) * 1e3)}
+
+
+def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
+    import jax.numpy as jnp  # noqa: F401  (keeps jax initialized up front)
+    from repro.runtime.engine import EngineConfig, StemEngine
+
+    ecfg = EngineConfig.for_trace(
+        max_slots=args.max_slots, max_prompt=args.max_prompt,
+        max_new_tokens=args.decode_tokens, page_size=stem_cfg.block_size,
+        budget_frac=budget_frac)
+    engine = StemEngine(bundle, params, stem_cfg, ecfg)
+    rng = np.random.RandomState(args.seed + 1)
+    trace = build_trace(rng, args.requests, args.min_prompt, args.max_prompt,
+                        args.decode_tokens, cfg.vocab_size, args.arrival_every)
+    t0 = time.perf_counter()
+    finished = engine.run(trace)
+    wall = time.perf_counter() - t0
+    stats = _latency_stats(finished)
+    total_tokens = sum(len(f.tokens) for f in finished)
+    ttfts = [f.ttft_s for f in finished]
+    out = {
+        "mode": "engine",
+        "requests": len(finished),
+        "total_tokens": total_tokens,
+        "wall_s": wall,
+        "throughput_tok_s": total_tokens / max(wall, 1e-9),
+        "ttft_ms_mean": float(np.mean(ttfts) * 1e3),
+        "engine_stats": dict(engine.stats),
+        "tokens": {f.uid: f.tokens for f in finished},
+        **stats,
+    }
+    print(f"engine: {len(finished)} reqs, {total_tokens} tokens in "
+          f"{wall*1e3:.0f} ms -> {out['throughput_tok_s']:.1f} tok/s; "
+          f"TTFT {out['ttft_ms_mean']:.1f} ms; per-token p50 "
+          f"{out['p50_ms']:.2f} / p95 {out['p95_ms']:.2f} ms; "
+          f"slots reused {engine.stats['slots_reused']}, "
+          f"max concurrency {engine.stats['max_concurrency']}", flush=True)
+    return out
+
+
+def run_fixed_batch(args, cfg, bundle, params, stem_cfg):
+    """Legacy one-shot batch, ragged: pad per request, per-row cache_lens."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import steps as steps_lib
+    from repro.models import transformer
+
+    # Right-padded ragged prompts are only sound for global-attention
+    # mixers: per-row masking hides padding K/V, and decode overwrites it.
+    # Recurrent/SSM states absorb padding tokens irreversibly, and ring
+    # caches treat padding slots as valid in-window keys.
+    kinds = {k for _, ks in transformer.layer_program(cfg) for k in ks}
+    unsafe = kinds - {"dense", "moe", "mla_dense", "mla_moe"}
+    if unsafe:
+        raise NotImplementedError(
+            f"--fixed-batch ragged prompts unsupported for sub-layers "
+            f"{sorted(unsafe)} ({cfg.name}): padding would contaminate "
+            "recurrent/ring state")
+
+    rng = np.random.RandomState(args.seed + 1)
+    lens = rng.randint(args.min_prompt, args.max_prompt + 1,
+                       size=(args.requests,)).astype(np.int32)
+    max_prompt = int(lens.max())
+    max_len = max_prompt + args.decode_tokens
+    toks = np.zeros((args.requests, max_prompt), np.int32)
+    for i, L in enumerate(lens):
+        toks[i, :L] = rng.randint(0, cfg.vocab_size, size=(int(L),))
+
+    prefill = jax.jit(lambda p, b, lp: bundle.prefill(
+        p, b, max_len=max_len, stem_cfg=stem_cfg, last_pos=lp))
+    serve = jax.jit(steps_lib.make_serve_step(bundle), donate_argnums=(2,),
+                    static_argnames=())
+
+    t0 = time.perf_counter()
+    batch = {"tokens": jnp.asarray(toks)}
+    logits, caches = jax.block_until_ready(
+        prefill(params, batch, jnp.asarray(lens - 1)))
+    ttft = time.perf_counter() - t0
+    toks_step = jnp.argmax(logits, axis=-1)[:, None]
+    out_tokens = [np.asarray(toks_step)]
+    t1 = time.perf_counter()
+    cache_lens = jnp.asarray(lens)
+    for i in range(args.decode_tokens - 1):
+        logits, caches = serve(params, toks_step, caches,
+                               cache_lens if i == 0 else None)
+        toks_step = jnp.argmax(logits, axis=-1)[:, None]
+        out_tokens.append(np.asarray(toks_step))
+    jax.block_until_ready(toks_step)
+    dt = time.perf_counter() - t1
+    per_tok = dt / max(args.decode_tokens - 1, 1)
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"fixed-batch (ragged lens {lens.tolist()}): TTFT {ttft*1e3:.1f} ms, "
+          f"decode {per_tok*1e3:.2f} ms/token ({args.requests} seqs)", flush=True)
+    return {"mode": "fixed-batch", "ttft_s": ttft, "ms_per_token": per_tok * 1e3,
+            "prompt_lens": lens.tolist(),
+            "tokens": {i: gen[i].tolist() for i in range(args.requests)}}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--min-prompt", type=int, default=48)
+    ap.add_argument("--max-prompt", type=int, default=200)
     ap.add_argument("--decode-tokens", type=int, default=16)
-    ap.add_argument("--stem", action="store_true")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="request i arrives at engine step i * this")
+    ap.add_argument("--stem", action="store_true",
+                    help="sparse decode budget (< 1.0); off = dense-equivalent")
+    ap.add_argument("--budget-frac", type=float, default=0.5)
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="Stem block/page size; 0 = auto from max prompt")
+    ap.add_argument("--fixed-batch", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    import jax
-    import jax.numpy as jnp
-
     from repro import configs
     from repro.core.config import StemConfig
-    from repro.launch import steps as steps_lib
     from repro.models import registry
+    import jax
 
     cfg = configs.get_config(args.arch)
     if args.reduced:
         cfg = configs.reduced(cfg).replace(dtype="float32")
+    if cfg.family == "encdec" or cfg.vlm_stub:
+        raise NotImplementedError(
+            f"serve drives token-only decoder prompts; {cfg.name} needs "
+            "encoder frames / patch embeddings (use launch/eval paths)")
     bundle = registry.build(cfg)
     params = bundle.init_params(jax.random.PRNGKey(args.seed))
 
-    stem_cfg = None
-    if args.stem and cfg.use_stem:
-        bs = max(16, min(128, args.prompt_len // 8))
-        stem_cfg = StemConfig(block_size=bs, min_budget_blocks=2, sink_blocks=1,
-                              local_blocks=1, stride=4)
-
-    max_len = args.prompt_len + args.decode_tokens
-    batch = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len),
-        0, cfg.vocab_size)}
-    if cfg.vlm_stub:
-        s_img = args.prompt_len // 4
-        batch["patch_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2), (args.batch, s_img, cfg.d_model), jnp.float32)
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(
-            jax.random.PRNGKey(3), (args.batch, cfg.encdec.encoder_frames,
-                                    cfg.d_model), jnp.float32)
-
-    prefill = jax.jit(steps_lib.make_prefill_step(bundle, max_len=max_len,
-                                                  stem_cfg=stem_cfg))
-    serve = jax.jit(steps_lib.make_serve_step(bundle), donate_argnums=(2,))
-
-    t0 = time.perf_counter()
-    logits, caches = jax.block_until_ready(prefill(params, batch))
-    ttft = time.perf_counter() - t0
-    print(f"prefill (TTFT proxy): {ttft*1e3:.1f} ms  stem={'on' if stem_cfg else 'off'}",
+    bs = args.block_size or max(16, min(128, args.max_prompt // 8))
+    bs = -(-bs // 8) * 8
+    stem_cfg = StemConfig(block_size=bs, min_budget_blocks=2, sink_blocks=1,
+                          local_blocks=1, stride=4)
+    budget_frac = args.budget_frac if args.stem else 1.0
+    print(f"serve: arch={cfg.name} page/block={bs} "
+          f"stem={'on' if args.stem else 'off'} budget_frac={budget_frac}",
           flush=True)
 
-    toks = jnp.argmax(logits, axis=-1)[:, None]
-    out_tokens = [np.asarray(toks)]
-    t1 = time.perf_counter()
-    for _ in range(args.decode_tokens - 1):
-        logits, caches = serve(params, toks, caches)
-        toks = jnp.argmax(logits, axis=-1)[:, None]
-        out_tokens.append(np.asarray(toks))
-    jax.block_until_ready(toks)
-    dt = time.perf_counter() - t1
-    per_tok = dt / max(args.decode_tokens - 1, 1)
-    print(f"decode: {per_tok*1e3:.2f} ms/token ({args.batch} seqs)", flush=True)
-    gen = np.concatenate(out_tokens, axis=1)
-    print(f"generated shape: {gen.shape}", flush=True)
-    return {"ttft_s": ttft, "ms_per_token": per_tok * 1e3, "tokens": gen}
+    if args.fixed_batch:
+        return run_fixed_batch(args, cfg, bundle, params,
+                               stem_cfg if args.stem else None)
+    return run_engine(args, cfg, bundle, params, stem_cfg, budget_frac)
 
 
 if __name__ == "__main__":

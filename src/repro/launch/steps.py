@@ -15,7 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import optim
 from repro.configs.base import ArchConfig, RunShape
 from repro.core.config import StemConfig
-from repro.models import registry
+from repro.models import attention, mla, registry, transformer
 from repro.sharding import rules as rules_lib
 
 PAPER_STEM = StemConfig()   # paper defaults: B=128, mu=0.7, beta=0.2, floor 54
@@ -87,10 +87,79 @@ def make_prefill_step(bundle: registry.ModelBundle, *, max_len: int,
     return prefill_step
 
 
+def set_cache_positions(caches, cache_lens: jnp.ndarray):
+    """Pin every attention/MLA cache's write position to per-sequence
+    lengths (``(b,)`` int32).  Cache leaves are stacked ``(n_layers, ...)``,
+    so the position leaf becomes ``(n_layers, b)`` and the layer scan hands
+    each layer its ``(b,)`` row.  Recurrent/SSM states are position-free and
+    pass through untouched."""
+    lens = jnp.asarray(cache_lens, jnp.int32)
+
+    def fix(c):
+        if isinstance(c, attention.KVCache):
+            return c._replace(pos=jnp.broadcast_to(lens, (c.k.shape[0],) + lens.shape))
+        if isinstance(c, mla.MLACache):
+            return c._replace(pos=jnp.broadcast_to(lens, (c.c_kv.shape[0],) + lens.shape))
+        return c
+
+    return jax.tree.map(
+        fix, caches,
+        is_leaf=lambda x: isinstance(x, (attention.KVCache, mla.MLACache)))
+
+
 def make_serve_step(bundle: registry.ModelBundle):
-    def serve_step(params, tokens, caches):
+    """(params, tokens, caches[, cache_lens]) -> (logits, caches).
+
+    ``cache_lens`` (``(b,)`` int32) overrides the caches' write positions
+    per sequence — the ragged fixed-batch path: each row decodes against
+    its own prompt length instead of one shared scalar.  Positions advance
+    inside the caches afterwards, so pass it only on the first step."""
+    def serve_step(params, tokens, caches, cache_lens=None):
+        if cache_lens is not None:
+            caches = set_cache_positions(caches, cache_lens)
         return bundle.decode_step(params, tokens, caches)
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Paged-engine steps (runtime/engine.py)
+# ---------------------------------------------------------------------------
+
+def make_insert_prefill(bundle: registry.ModelBundle, *,
+                        stem_cfg: StemConfig):
+    """(params, tokens (1, Lp), true_len, pools, page_row) ->
+    (next-token logits (vocab,), pools).
+
+    Prefills ONE request (right-padded to a page multiple) and scatters its
+    K/V pages + Stem block summaries into the engine's page pools.
+    ``page_row`` is the request's full trash-padded reservation — every
+    page in it is reset to pristine first (recycled pages are dirty), then
+    the leading prompt pages are written.  jit one instance per
+    padded-length bucket; donate the pools."""
+    cfg = bundle.cfg
+    transformer.assert_paged_servable(cfg)
+
+    def insert_prefill(params, tokens, true_len, pools, page_row):
+        return transformer.prefill_kv_pages(params, tokens, true_len, pools,
+                                            page_row, cfg, stem_cfg)
+    return insert_prefill
+
+
+def make_batched_decode(bundle: registry.ModelBundle, *,
+                        stem_cfg: StemConfig, budget_frac: float = 1.0):
+    """(params, tokens (S,1), pools, page_table (S,P), cache_lens (S,)) ->
+    (logits (S, vocab), pools).
+
+    One ragged decode step for every engine slot against the paged Stem KV
+    cache; ``budget_frac=1.0`` is the dense-equivalent arm."""
+    cfg = bundle.cfg
+    transformer.assert_paged_servable(cfg)
+
+    def batched_decode(params, tokens, pools, page_table, cache_lens):
+        return transformer.paged_decode_step(
+            params, tokens, pools, page_table, cache_lens, cfg,
+            stem_cfg=stem_cfg, budget_frac=budget_frac)
+    return batched_decode
 
 
 # ---------------------------------------------------------------------------

@@ -28,7 +28,8 @@ from repro.models import common
 class KVCache(NamedTuple):
     k: jnp.ndarray        # (b, hk, L, dh)
     v: jnp.ndarray
-    pos: jnp.ndarray      # scalar int32 — next write position
+    pos: jnp.ndarray      # int32 next write position: scalar (uniform batch)
+                          # or (b,) per-sequence (ragged/continuous batching)
 
 
 def init(ini: common.Initializer, cfg: ArchConfig) -> dict:
@@ -150,29 +151,65 @@ def apply_decode(
     window: Optional[int] = None,
     use_rope: bool = True,
 ) -> tuple[jnp.ndarray, KVCache]:
-    """One decode step against the cache (ring buffer when windowed)."""
+    """One decode step against the cache (ring buffer when windowed).
+
+    ``cache.pos`` may be a scalar (every row at the same length — the seed
+    behaviour) or a ``(b,)`` vector (ragged batch: each sequence writes and
+    masks at its own length; rope uses the per-row position)."""
     pos = cache.pos
-    q, k_new, v_new = _project(params, x, cfg, pos[None], use_rope=use_rope)
+    b = x.shape[0]
+    rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]      # (1,)|(b,1)
+    q, k_new, v_new = _project(params, x, cfg, rope_pos, use_rope=use_rope)
     L = cache.k.shape[2]
+    posv = jnp.broadcast_to(pos, (b,))                           # (b,)
     if window is None:
         ck, cv = common.update_cache(cache.k, cache.v, pos, k_new, v_new)
-        valid = jnp.arange(L) <= pos                      # (L,)
+        valid = jnp.arange(L)[None, :] <= posv[:, None]          # (b, L)
     else:
         ck, cv = common.update_ring_cache(cache.k, cache.v, pos, k_new, v_new, L)
-        slot_age = pos - ((pos - jnp.arange(L)) % L)      # wrote-at position per slot
-        valid = (slot_age >= 0) & (slot_age > pos - L)
-    b, h = q.shape[0], q.shape[1]
+        slot_age = posv[:, None] - ((posv[:, None] - jnp.arange(L)[None, :]) % L)
+        valid = (slot_age >= 0) & (slot_age > posv[:, None] - L)
+    h = q.shape[1]
     hk = ck.shape[1]
     group = h // hk
     s = jnp.einsum("bhgd,bhkd->bhgk",
                    q[:, :, 0].reshape(b, hk, group, -1).astype(jnp.float32),
                    ck.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bhkd->bhgd", p, cv.astype(jnp.float32))
     o = o.reshape(b, h, 1, cfg.head_dim).astype(x.dtype)
     out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
     return out, KVCache(k=ck, v=cv, pos=pos + 1)
+
+
+def apply_decode_paged(
+    params,
+    x: jnp.ndarray,                  # (slots, 1, d) — one new token per slot
+    cfg: ArchConfig,
+    pool,                            # runtime.paged.PagePool for this layer
+    page_table: jnp.ndarray,         # (slots, max_pages) global page ids
+    cache_lens: jnp.ndarray,         # (slots,) tokens already cached
+    stem_cfg: StemConfig,
+    *,
+    budget_frac: float = 1.0,
+    use_rope: bool = True,
+):
+    """One decode step against the paged Stem KV cache.
+
+    Appends the new token's K/V (+ summary increments) to each slot's
+    current page, then runs OAM page selection + exact attention over the
+    selected pages only.  ``budget_frac=1.0`` is the dense-equivalent
+    oracle arm (every valid page attends).  Returns (out, new_pool)."""
+    from repro.runtime import paged as paged_lib
+
+    lens = jnp.asarray(cache_lens, jnp.int32)
+    q, k_new, v_new = _project(params, x, cfg, lens[:, None], use_rope=use_rope)
+    pool = paged_lib.append_token(pool, page_table, lens, k_new, v_new, stem_cfg)
+    o = paged_lib.paged_sparse_decode(q, pool, page_table, lens + 1, stem_cfg,
+                                      budget_frac=budget_frac)
+    out = jnp.einsum("bhsk,hkd->bsd", o.astype(x.dtype), params["wo"])
+    return out, pool
 
 
 # ---------------------------------------------------------------------------

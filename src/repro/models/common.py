@@ -164,16 +164,32 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
 def update_cache(cache_k: jnp.ndarray, cache_v: jnp.ndarray, pos: jnp.ndarray,
                  new_k: jnp.ndarray, new_v: jnp.ndarray):
     """Insert one step at position ``pos``.  cache: (b, hk, L, d);
-    new: (b, hk, 1, d)."""
-    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, new_k.astype(cache_k.dtype), pos, axis=2)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, new_v.astype(cache_v.dtype), pos, axis=2)
+    new: (b, hk, 1, d).  ``pos`` is a scalar (uniform batch) or a ``(b,)``
+    vector (ragged batch — every row writes at its own length)."""
+    if pos.ndim == 0:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, new_k.astype(cache_k.dtype), pos, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, new_v.astype(cache_v.dtype), pos, axis=2)
+        return ck, cv
+    bidx = jnp.arange(cache_k.shape[0])
+    ck = cache_k.at[bidx, :, pos].set(new_k[:, :, 0].astype(cache_k.dtype))
+    cv = cache_v.at[bidx, :, pos].set(new_v[:, :, 0].astype(cache_v.dtype))
     return ck, cv
 
 
 def update_ring_cache(cache_k, cache_v, pos, new_k, new_v, window: int):
     """Ring-buffer cache for windowed attention: O(window) memory at any
-    sequence length (what makes recurrentgemma's 500k decode sub-quadratic)."""
+    sequence length (what makes recurrentgemma's 500k decode sub-quadratic).
+    ``pos`` scalar or (b,) — see ``update_cache``."""
     slot = pos % window
-    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, new_k.astype(cache_k.dtype), slot, axis=2)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, new_v.astype(cache_v.dtype), slot, axis=2)
+    if pos.ndim == 0:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, new_k.astype(cache_k.dtype), slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, new_v.astype(cache_v.dtype), slot, axis=2)
+        return ck, cv
+    bidx = jnp.arange(cache_k.shape[0])
+    ck = cache_k.at[bidx, :, slot].set(new_k[:, :, 0].astype(cache_k.dtype))
+    cv = cache_v.at[bidx, :, slot].set(new_v[:, :, 0].astype(cache_v.dtype))
     return ck, cv

@@ -113,24 +113,33 @@ def prefill_into_cache(params, x, cfg: ArchConfig, *, positions, max_len: int,
 
 
 def apply_decode(params, x, cfg: ArchConfig, cache: MLACache):
-    """One decode step.  Latent cache only: expand per step."""
+    """One decode step.  Latent cache only: expand per step.  ``cache.pos``
+    scalar or (b,) — per-row positions for ragged/continuous batching."""
     m = cfg.mla
     pos = cache.pos
-    q_nope, q_rope = _queries(params, x, cfg, pos[None])
-    c_new, kr_new = _latents(params, x, cfg, pos[None])
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache.c_kv, c_new.astype(cache.c_kv.dtype), pos, axis=1)
-    ckr = jax.lax.dynamic_update_slice_in_dim(
-        cache.k_rope, kr_new.astype(cache.k_rope.dtype), pos, axis=1)
+    b = x.shape[0]
+    rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
+    q_nope, q_rope = _queries(params, x, cfg, rope_pos)
+    c_new, kr_new = _latents(params, x, cfg, rope_pos)
+    if pos.ndim == 0:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.c_kv, c_new.astype(cache.c_kv.dtype), pos, axis=1)
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, kr_new.astype(cache.k_rope.dtype), pos, axis=1)
+    else:
+        bidx = jnp.arange(b)
+        ck = cache.c_kv.at[bidx, pos].set(c_new[:, 0].astype(cache.c_kv.dtype))
+        ckr = cache.k_rope.at[bidx, pos].set(kr_new[:, 0].astype(cache.k_rope.dtype))
     L = ck.shape[1]
-    valid = jnp.arange(L) <= pos
+    posv = jnp.broadcast_to(pos, (b,))
+    valid = jnp.arange(L)[None, :] <= posv[:, None]
 
     # Absorbed attention: score = q_nope . (W_UK c) + q_rope . k_rope.
     q_abs = jnp.einsum("bhsk,rhk->bhsr", q_nope, params["w_uk"])   # (b,h,1,r)
     s = jnp.einsum("bhsr,blr->bhsl", q_abs.astype(jnp.float32), ck.astype(jnp.float32))
     s = s + jnp.einsum("bhsk,blk->bhsl", q_rope.astype(jnp.float32), ckr.astype(jnp.float32))
     s = s * ((m.nope_head_dim + m.rope_head_dim) ** -0.5)
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhsl,blr->bhsr", p, ck.astype(jnp.float32))  # (b,h,1,r)
     o = jnp.einsum("bhsr,rhk->bhsk", o_lat.astype(x.dtype), params["w_uv"])

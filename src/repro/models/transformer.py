@@ -378,11 +378,17 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int):
 
 
 def prefill(params, batch: dict, cfg: ArchConfig, *, max_len: int,
-            stem_cfg: Optional[StemConfig] = None):
+            stem_cfg: Optional[StemConfig] = None,
+            last_pos: Optional[jnp.ndarray] = None):
     """Process the full prompt.  Returns (last-position logits, caches).
 
     Stem (the paper's contribution) runs here — this is the pre-filling
     phase whose latency the paper optimizes.
+
+    ``last_pos`` (scalar or (b,) int32) selects which position's logits to
+    return per row — required for right-padded ragged prompts where row i's
+    real last token sits at ``len_i - 1``, not at ``seq - 1``.  Default:
+    the final position (uniform batch).
     """
     x = _embed_inputs(params, batch, cfg)
     positions = jnp.arange(x.shape[1])
@@ -406,8 +412,133 @@ def prefill(params, batch: dict, cfg: ArchConfig, *, max_len: int,
         else:
             x, cache = jax.lax.scan(body, x, seg)
         caches.append(cache)
-    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    if last_pos is None:
+        x_last = x[:, -1:]
+    else:
+        lp = jnp.broadcast_to(jnp.asarray(last_pos, jnp.int32), (x.shape[0],))
+        x_last = jnp.take_along_axis(x, lp[:, None, None], axis=1)
+    logits = _logits(params, x_last, cfg)[:, 0]
     return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: page pools + batched ragged decode (runtime/engine.py)
+# ---------------------------------------------------------------------------
+
+PAGED_KINDS = ("dense", "moe")   # attention sub-layers the paged engine serves
+
+
+def assert_paged_servable(cfg: ArchConfig) -> None:
+    """The paged engine needs every mixer to be causal global attention —
+    ring/windowed, MLA-latent, and recurrent states have no page layout."""
+    for _, kinds in layer_program(cfg):
+        for k in kinds:
+            if k not in PAGED_KINDS:
+                raise NotImplementedError(
+                    f"paged serving supports {PAGED_KINDS} sub-layers, got {k!r} "
+                    f"(arch {cfg.name})")
+
+
+def init_page_pools(cfg: ArchConfig, num_pages: int, stem_cfg: StemConfig):
+    """Per-layer page pools, stacked along the scan axis like init_caches.
+    Every attention layer gets its own (hk, P, page, d) pool; the page
+    table (slot -> pages) is shared across layers and lives in the engine."""
+    from repro.runtime import paged as paged_lib
+
+    assert_paged_servable(cfg)
+    pools = []
+    for n, kinds in layer_program(cfg):
+        one = {f"sub{i}": paged_lib.init_pool(
+                   num_pages, cfg.num_kv_heads, stem_cfg.block_size,
+                   cfg.head_dim, stem_cfg.stride, cfg.jnp_dtype)
+               for i, _ in enumerate(kinds)}
+        pools.append(jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (n,) + t.shape), one))
+    return pools
+
+
+def prefill_kv_pages(params, tokens: jnp.ndarray, true_len: jnp.ndarray,
+                     pools, page_row: jnp.ndarray, cfg: ArchConfig,
+                     stem_cfg: StemConfig):
+    """Prefill ONE request and write its pages + summaries into the pools.
+
+    tokens: (1, Lp) right-padded to a page multiple; true_len: scalar int32;
+    page_row: (max_pages_per_slot,) — *every* page reserved for the request
+    (prompt pages first, then decode-spill pages), padded with the trash
+    page.  All of them are reset to pristine before the prompt's
+    (Lp / page_size) leading pages are written: the allocator recycles pages
+    without clearing them, and the decode-time summary increments assume
+    fresh pages.  Returns (next-token logits (vocab,), new pools).
+    jit-able: one trace per padded length bucket.
+    """
+    from repro.runtime import paged as paged_lib
+
+    logits, caches = prefill(params, {"tokens": tokens}, cfg,
+                             max_len=tokens.shape[1], stem_cfg=stem_cfg,
+                             last_pos=true_len - 1)
+    prompt_pages = page_row[:tokens.shape[1] // stem_cfg.block_size]
+    new_pools = []
+    for si, (n, kinds) in enumerate(layer_program(cfg)):
+        seg = {}
+        for i, _ in enumerate(kinds):
+            cache = caches[si][f"sub{i}"]          # KVCache k: (n, 1, hk, Lp, d)
+            pool = pools[si][f"sub{i}"]            # PagePool k: (n, hk, P, pg, d)
+            seg[f"sub{i}"] = jax.vmap(
+                lambda p, k, v: paged_lib.write_prefill_pages(
+                    paged_lib.reset_pages(p, page_row), prompt_pages,
+                    k[0], v[0], true_len, stem_cfg)
+            )(pool, cache.k, cache.v)
+        new_pools.append(seg)
+    return logits[0], new_pools
+
+
+def paged_decode_step(params, tokens: jnp.ndarray, pools,
+                      page_table: jnp.ndarray, cache_lens: jnp.ndarray,
+                      cfg: ArchConfig, *, stem_cfg: StemConfig,
+                      budget_frac: float = 1.0):
+    """One token for every engine slot against the paged Stem KV cache.
+
+    tokens: (slots, 1); page_table: (slots, max_pages); cache_lens:
+    (slots,).  Slots with an all-zero page table row (inactive) compute
+    garbage into the reserved trash page and are ignored by the engine.
+    Returns (logits (slots, vocab), new pools).
+    """
+    x = common.embed_lookup(params["embed"], tokens, cfg.jnp_dtype)
+    if cfg.embed_scale_flag:
+        x = x * (cfg.d_model ** 0.5)
+    new_pools = []
+    for si, (n, kinds) in enumerate(layer_program(cfg)):
+        seg = params[f"segment{si}"]
+        pool = pools[si]
+
+        def body(x, scanned, kinds=kinds):
+            layer_params, pool = scanned
+            new_pool = {}
+            for i, k in enumerate(kinds):
+                p = layer_params[f"sub{i}"]
+                h = common.rms_norm(x, p["norm1"])
+                mix, np_i = attention.apply_decode_paged(
+                    p["attn"], h, cfg, pool[f"sub{i}"], page_table,
+                    cache_lens, stem_cfg, budget_frac=budget_frac)
+                new_pool[f"sub{i}"] = np_i
+                x = x + mix
+                h2 = common.rms_norm(x, p["norm2"])
+                if k == "moe":
+                    y, _ = moe.apply(p["ffn"], h2, cfg.moe, cfg.activation)
+                else:
+                    y = mlp.apply(p["ffn"], h2, cfg.activation)
+                x = x + y
+            return x, new_pool
+
+        if n == 1:
+            x, npool = body(x, (jax.tree.map(lambda t: t[0], seg),
+                                jax.tree.map(lambda t: t[0], pool)))
+            npool = jax.tree.map(lambda t: t[None], npool)
+        else:
+            x, npool = jax.lax.scan(body, x, (seg, pool))
+        new_pools.append(npool)
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, new_pools
 
 
 def decode_step(params, tokens: jnp.ndarray, caches, cfg: ArchConfig):

@@ -3,4 +3,17 @@ from repro.runtime.fault_tolerance import (FailureInjector, InjectedFailure,
                                            run_with_restarts)
 
 __all__ = ["StragglerMonitor", "FailureInjector", "InjectedFailure",
-           "run_with_restarts"]
+           "run_with_restarts", "Request", "FinishedRequest", "EngineConfig",
+           "StemEngine", "PageAllocator", "PagePool"]
+
+
+def __getattr__(name):
+    # Lazy: engine pulls in jax/models; keep the lightweight runtime imports
+    # (straggler/fault-tolerance) usable without tracing machinery.
+    if name in ("Request", "FinishedRequest", "EngineConfig", "StemEngine"):
+        from repro.runtime import engine as _engine
+        return getattr(_engine, name)
+    if name in ("PageAllocator", "PagePool"):
+        from repro.runtime import paged as _paged
+        return getattr(_paged, name)
+    raise AttributeError(name)

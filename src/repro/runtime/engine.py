@@ -1,0 +1,289 @@
+"""Continuous-batching serving engine over the paged Stem KV cache.
+
+The first genuinely multi-tenant workload for the repo: requests with
+arbitrary prompt lengths arrive over time, are admitted into a fixed set of
+decode *slots* as capacity frees up, decode together in one ragged batched
+step per iteration, and release their pages the moment they finish —
+vLLM-shaped scheduling with Stem's coarse-to-fine selection running
+natively on the page pool (a page *is* a Stem block; see
+``runtime/paged.py``).
+
+Engine loop (one ``step()``):
+
+  1. **Admission** — FCFS from the waiting queue, gated on arrival step, a
+     free slot, and an all-or-nothing page reservation for
+     ``ceil((prompt_len + max_new_tokens - 1) / page_size)`` pages (the
+     final generated token is never fed back, so never cached).  Admission
+     runs the jitted ``insert_prefill`` (one trace per padded prompt-length
+     bucket) which writes the prompt's K/V pages + block summaries into the
+     pools and returns the first generated token.
+  2. **Batched decode** — one jitted ``batched_decode`` over *all* slots
+     (inactive slots scribble the reserved trash page and are ignored).
+     Every active slot appends its token and samples greedily.
+  3. **Recycling** — slots hitting EOS / max-new-tokens free their pages
+     and return to the free list; the next ``step()`` can re-admit into
+     them immediately.
+
+Determinism / batch-invariance: every per-slot computation in the decode
+step is row-parallel (selection, gather, softmax), so a request's token
+stream is bitwise independent of which slot it occupies and who its
+co-tenants are — ``tests/test_engine.py`` pins this differentially.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import StemConfig
+from repro.launch import steps as steps_lib
+from repro.models import transformer
+from repro.runtime import paged as paged_lib
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    arrival_step: int = 0         # engine step at which the request exists
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    uid: int
+    prompt_len: int
+    tokens: list                  # generated token ids (greedy)
+    slot: int
+    admitted_step: int
+    finished_step: int
+    ttft_s: float                 # wall-clock prefill (admission) latency
+    token_latencies_s: list       # wall-clock per generated token
+
+
+def pages_needed(prompt_len: int, max_new: int, page_size: int) -> int:
+    """Pages a request holds for its whole lifetime.  Tokens ever cached:
+    the prompt plus every generated token that is fed back (the final one
+    is not)."""
+    cached = prompt_len + max(max_new - 1, 0)
+    return -(-cached // page_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Sizing + policy knobs of the serving engine.
+
+    ``num_pages`` includes the reserved trash page 0.  A request needs
+    ``pages_needed(prompt_len, max_new_tokens, page_size)`` pages for its
+    whole lifetime (conservative up-front reservation — no mid-flight OOM),
+    and at most ``max_pages_per_slot`` (the static page-table width)."""
+    max_slots: int = 4
+    num_pages: int = 64
+    max_pages_per_slot: int = 16
+    budget_frac: float = 1.0      # 1.0 = dense-equivalent oracle arm
+    eos_id: Optional[int] = None
+
+    @classmethod
+    def for_trace(cls, *, max_slots: int, max_prompt: int,
+                  max_new_tokens: int, page_size: int,
+                  budget_frac: float = 1.0,
+                  eos_id: Optional[int] = None) -> "EngineConfig":
+        """Size the pool so every slot can hold the largest trace request —
+        the one place the reservation rule is encoded for drivers."""
+        per_slot = pages_needed(max_prompt, max_new_tokens, page_size)
+        return cls(max_slots=max_slots, num_pages=1 + max_slots * per_slot,
+                   max_pages_per_slot=per_slot, budget_frac=budget_frac,
+                   eos_id=eos_id)
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    tokens: list
+    admitted_step: int
+    ttft_s: float
+    token_latencies_s: list
+
+
+class StemEngine:
+    """Continuous-batching engine; host-side scheduler + jitted steps."""
+
+    def __init__(self, bundle, params, stem_cfg: StemConfig,
+                 ecfg: EngineConfig = EngineConfig()):
+        transformer.assert_paged_servable(bundle.cfg)
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.stem_cfg = stem_cfg
+        self.ecfg = ecfg
+        self.page_size = stem_cfg.block_size
+
+        S, P = ecfg.max_slots, ecfg.max_pages_per_slot
+        self.pools = transformer.init_page_pools(
+            bundle.cfg, ecfg.num_pages, stem_cfg)
+        self.allocator = paged_lib.PageAllocator(ecfg.num_pages)
+        self.page_table = np.zeros((S, P), np.int32)
+        self.cache_lens = np.zeros((S,), np.int32)
+        self.slot_pages: list = [None] * S     # page ids held by each slot
+        self.slots: list = [None] * S          # _SlotState | None
+        self.waiting: collections.deque = collections.deque()
+        self.finished: list = []
+        self.step_count = 0
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens_generated": 0,
+                      "slots_reused": 0, "max_concurrency": 0}
+        self._slot_ever_used = [False] * S
+
+        self._decode = jax.jit(steps_lib.make_batched_decode(
+            bundle, stem_cfg=stem_cfg, budget_frac=ecfg.budget_frac),
+            donate_argnums=(2,))
+        # jit retraces per token shape: one trace per padded prompt-length
+        # bucket, cached inside the one jitted callable.
+        self._prefill = jax.jit(steps_lib.make_insert_prefill(
+            bundle, stem_cfg=stem_cfg), donate_argnums=(3,))
+
+    # -- scheduling ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        npages = self._pages_needed(len(req.prompt), req.max_new_tokens)
+        if npages > self.ecfg.max_pages_per_slot:
+            raise ValueError(
+                f"request {req.uid} needs {npages} pages > max_pages_per_slot "
+                f"{self.ecfg.max_pages_per_slot}")
+        self.waiting.append(req)
+
+    def _pages_needed(self, prompt_len: int, max_new: int) -> int:
+        return pages_needed(prompt_len, max_new, self.page_size)
+
+    def reset_metrics(self) -> None:
+        """Zero the observability state (finished list, counters, slot-reuse
+        tracking) without touching pools, slots, or the allocator — e.g.
+        after a benchmark warmup pass."""
+        self.finished.clear()
+        self.stats.update({k: 0 for k in self.stats})
+        self._slot_ever_used = [False] * self.ecfg.max_slots
+
+    def _free_slot(self) -> Optional[int]:
+        for s, st in enumerate(self.slots):
+            if st is None:
+                return s
+        return None
+
+    # -- engine iteration ---------------------------------------------------
+
+    def _admit(self) -> None:
+        while self.waiting:
+            req = self.waiting[0]
+            if req.arrival_step > self.step_count:
+                break                           # not arrived yet (FCFS gate)
+            slot = self._free_slot()
+            if slot is None:
+                break
+            npages = self._pages_needed(len(req.prompt), req.max_new_tokens)
+            pages = self.allocator.alloc(npages)
+            if pages is None:
+                break                           # no memory — head-of-line waits
+            self.waiting.popleft()
+
+            plen = len(req.prompt)
+            npages_prompt = -(-plen // self.page_size)
+            padded = npages_prompt * self.page_size
+            toks = np.zeros((1, padded), np.int32)
+            toks[0, :plen] = req.prompt
+            # Full reservation, trash-padded: prefill resets every page in
+            # the row (recycled pages carry the previous tenant's summaries)
+            # before writing the leading npages_prompt prompt pages.
+            row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
+            row[:npages] = pages
+            t0 = time.perf_counter()
+            logits, self.pools = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(plen, jnp.int32),
+                self.pools, jnp.asarray(row))
+            first = int(np.argmax(np.asarray(logits)))
+            ttft = time.perf_counter() - t0
+            self.stats["prefills"] += 1
+            if self._slot_ever_used[slot]:
+                self.stats["slots_reused"] += 1
+            self._slot_ever_used[slot] = True
+
+            self.page_table[slot] = row
+            self.cache_lens[slot] = plen
+            self.slot_pages[slot] = pages
+            self.slots[slot] = _SlotState(
+                req=req, tokens=[first], admitted_step=self.step_count,
+                ttft_s=ttft, token_latencies_s=[])
+            self.stats["tokens_generated"] += 1
+            if self._is_finished(self.slots[slot]):
+                self._recycle(slot)
+
+    def _is_finished(self, st: _SlotState) -> bool:
+        if len(st.tokens) >= st.req.max_new_tokens:
+            return True
+        return self.ecfg.eos_id is not None and st.tokens[-1] == self.ecfg.eos_id
+
+    def _recycle(self, slot: int) -> None:
+        st = self.slots[slot]
+        self.finished.append(FinishedRequest(
+            uid=st.req.uid, prompt_len=len(st.req.prompt), tokens=st.tokens,
+            slot=slot, admitted_step=st.admitted_step,
+            finished_step=self.step_count, ttft_s=st.ttft_s,
+            token_latencies_s=st.token_latencies_s))
+        self.allocator.free(self.slot_pages[slot])
+        self.page_table[slot] = 0
+        self.cache_lens[slot] = 0
+        self.slot_pages[slot] = None
+        self.slots[slot] = None
+
+    def _decode_all(self) -> None:
+        active = [s for s, st in enumerate(self.slots) if st is not None]
+        if not active:
+            return
+        self.stats["max_concurrency"] = max(self.stats["max_concurrency"],
+                                            len(active))
+        tokens = np.zeros((self.ecfg.max_slots, 1), np.int32)
+        for s in active:
+            tokens[s, 0] = self.slots[s].tokens[-1]
+        t0 = time.perf_counter()
+        logits, self.pools = self._decode(
+            self.params, jnp.asarray(tokens), self.pools,
+            jnp.asarray(self.page_table), jnp.asarray(self.cache_lens))
+        logits = np.asarray(logits)
+        dt = time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        for s in active:
+            self.cache_lens[s] += 1       # the fed-back token is now cached
+            nxt = int(np.argmax(logits[s]))
+            st = self.slots[s]
+            st.tokens.append(nxt)
+            # every active request waits the whole batched step for its
+            # token, so the step wall-time IS the per-token latency
+            st.token_latencies_s.append(dt)
+            self.stats["tokens_generated"] += 1
+            if self._is_finished(st):
+                self._recycle(s)
+
+    def step(self) -> None:
+        """One engine iteration: admit, decode every active slot, recycle."""
+        self._admit()
+        self._decode_all()
+        self.step_count += 1
+
+    @property
+    def pending(self) -> int:
+        return len(self.waiting) + sum(st is not None for st in self.slots)
+
+    def run(self, requests=(), max_steps: int = 100_000) -> list:
+        """Drive submitted (+ given) requests to completion; returns
+        FinishedRequests sorted by uid."""
+        for r in requests:
+            self.submit(r)
+        while self.pending:
+            if self.step_count >= max_steps:
+                raise RuntimeError(f"engine stalled after {max_steps} steps")
+            self.step()
+        return sorted(self.finished, key=lambda f: f.uid)

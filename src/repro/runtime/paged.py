@@ -1,0 +1,217 @@
+"""Block-paged Stem KV cache: page pool, per-page summaries, paged decode.
+
+The serving engine (``runtime/engine.py``) stores every attention layer's
+KV cache in a shared *page pool* instead of per-sequence contiguous
+buffers.  A page holds ``page_size`` tokens (= the Stem ``block_size``, so
+a page **is** a Stem block) and carries the block-pooled representations —
+the anti-diagonal K group means and the max-pooled log||V|| — alongside the
+raw K/V.  That makes Stem's coarse-to-fine decode native to the paged
+layout: the page table *is* the block index, OAM scores pages directly
+from the pooled summaries, and only the selected pages are gathered.
+
+Layout (one attention layer):
+
+  k, v : (hk, num_pages, page_size, d)    raw cache tokens
+  kg   : (hk, num_pages, stride, d)       anti-diag group means (fp32)
+  vm   : (hk, num_pages)                  max-pooled log ||V||  (fp32)
+
+Page 0 is **reserved as the trash page**: inactive engine slots carry an
+all-zero page table, so their (masked-out) decode writes land in page 0 and
+never alias a live sequence.  The allocator never hands out page 0.
+
+Per-slot logical state (page table row + cache length) lives *outside* the
+pool and is passed to the jitted steps as plain ``(slots, max_pages)`` /
+``(slots,)`` arrays — the pool itself is sequence-agnostic, which is what
+makes admission/recycling a pure host-side page-table edit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decode as decode_lib
+from repro.core import metric as metric_lib
+from repro.core.config import StemConfig
+
+TRASH_PAGE = 0
+
+
+class PagePool(NamedTuple):
+    """One attention layer's paged KV + Stem summary storage."""
+
+    k: jnp.ndarray    # (hk, P, page, d)
+    v: jnp.ndarray    # (hk, P, page, d)
+    kg: jnp.ndarray   # (hk, P, stride, d) fp32 anti-diag group means
+    vm: jnp.ndarray   # (hk, P) fp32 max-pooled log ||V||
+
+
+def init_pool(num_pages: int, num_kv_heads: int, page_size: int, head_dim: int,
+              stride: int, dtype=jnp.float32) -> PagePool:
+    hk, p = num_kv_heads, num_pages
+    return PagePool(
+        k=jnp.zeros((hk, p, page_size, head_dim), dtype),
+        v=jnp.zeros((hk, p, page_size, head_dim), dtype),
+        kg=jnp.zeros((hk, p, stride, head_dim), jnp.float32),
+        vm=jnp.full((hk, p), decode_lib.V_MAG_FLOOR, jnp.float32),
+    )
+
+
+def reset_pages(pool: PagePool, page_ids: jnp.ndarray) -> PagePool:
+    """Return pages to their pristine state (zero K/V and group means, vm at
+    the norm floor).  Must run on every page a request reserves *before* its
+    first write: the allocator recycles pages without touching the pool, and
+    ``append_token``'s kg-add / vm-max increments assume a fresh page — a
+    previous tenant's summaries would otherwise leak into OAM selection.
+    Duplicate ids (e.g. trash-page padding) are harmless: every write is the
+    same pristine value."""
+    return PagePool(
+        k=pool.k.at[:, page_ids].set(0),
+        v=pool.v.at[:, page_ids].set(0),
+        kg=pool.kg.at[:, page_ids].set(0),
+        vm=pool.vm.at[:, page_ids].set(decode_lib.V_MAG_FLOOR),
+    )
+
+
+def write_prefill_pages(pool: PagePool, page_ids: jnp.ndarray,
+                        k: jnp.ndarray, v: jnp.ndarray, true_len: jnp.ndarray,
+                        cfg: StemConfig) -> PagePool:
+    """Scatter one prefilled sequence's K/V + summaries into the pool.
+
+    k, v: (hk, L, d) with L = len(page_ids) * page_size (right-padded
+    prompt).  Positions >= true_len are zeroed before the write so page
+    contents and summaries match the zero-padded-cache semantics that
+    ``append_token`` extends incrementally.
+    """
+    hk, L, d = k.shape
+    bs = cfg.block_size
+    npages = L // bs
+    keep = (jnp.arange(L) < true_len)[None, :, None]
+    k = jnp.where(keep, k, 0)
+    v = jnp.where(keep, v, 0)
+    kp = k.reshape(hk, npages, bs, d)
+    vp = v.reshape(hk, npages, bs, d)
+    kg = metric_lib.antidiag_pool(k, bs, cfg.stride)        # (hk, npages, s, d)
+    vm = metric_lib.value_block_magnitude(v, bs)            # (hk, npages)
+    return PagePool(
+        k=pool.k.at[:, page_ids].set(kp.astype(pool.k.dtype)),
+        v=pool.v.at[:, page_ids].set(vp.astype(pool.v.dtype)),
+        kg=pool.kg.at[:, page_ids].set(kg.astype(jnp.float32)),
+        vm=pool.vm.at[:, page_ids].set(vm.astype(jnp.float32)),
+    )
+
+
+def append_token(pool: PagePool, page_table: jnp.ndarray,
+                 cache_lens: jnp.ndarray, k_new: jnp.ndarray,
+                 v_new: jnp.ndarray, cfg: StemConfig) -> PagePool:
+    """Write one new token per slot into its current page + fold summaries.
+
+    The increments reproduce ``write_prefill_pages`` of the grown sequence
+    exactly (pinned by tests/test_engine.py): group means divide by the
+    *full* group population (block_size / stride), so adding
+    ``k_new / per_group`` into the token's group matches the batch pooling
+    once the page fills — and the zero-dilution of a partial page in the
+    meantime, which is the forced-local block anyway.
+
+    page_table: (slots, max_pages) global page ids; cache_lens: (slots,)
+    tokens already present (the new token lands at this position).
+    k_new, v_new: (slots, hk, 1, d).  Slots whose page table points at the
+    trash page (inactive) scribble page 0 harmlessly.
+    """
+    b = k_new.shape[0]
+    bs, stride = cfg.block_size, cfg.stride
+    per_group = bs // stride
+    lens = jnp.asarray(cache_lens, jnp.int32)
+    pids = jnp.take_along_axis(page_table, (lens // bs)[:, None], axis=1)[:, 0]
+    offs = lens % bs
+    kn = k_new[:, :, 0]                                     # (slots, hk, d)
+    vn = v_new[:, :, 0]
+    knh = jnp.swapaxes(kn, 0, 1)                            # (hk, slots, d)
+    vnh = jnp.swapaxes(vn, 0, 1)
+    log_norm = jnp.log(jnp.maximum(
+        jnp.linalg.norm(vnh.astype(jnp.float32), axis=-1), 1e-20))
+    return PagePool(
+        k=pool.k.at[:, pids, offs].set(knh.astype(pool.k.dtype)),
+        v=pool.v.at[:, pids, offs].set(vnh.astype(pool.v.dtype)),
+        kg=pool.kg.at[:, pids, offs % stride].add(
+            (knh / per_group).astype(jnp.float32)),
+        vm=pool.vm.at[:, pids].max(log_norm),
+    )
+
+
+def paged_sparse_decode(
+    q: jnp.ndarray,             # (slots, hq, 1, d)
+    pool: PagePool,
+    page_table: jnp.ndarray,    # (slots, max_pages) global page ids
+    cache_lens: jnp.ndarray,    # (slots,) valid tokens per slot
+    cfg: StemConfig,
+    budget_frac: float = 0.25,
+) -> jnp.ndarray:
+    """Stem-sparse decode attention straight off the page pool.
+
+    Identical math to ``core.decode.sparse_decode_attention`` over the
+    logical (page-table-ordered) cache: summaries are gathered per slot via
+    the page table, OAM + the TPD-style budget select *logical* page slots
+    per row, and only the selected pages are fetched from the pool.  At
+    ``budget_frac=1.0`` this equals dense decode over each slot's prefix.
+    """
+    b, hq, _, d = q.shape
+    hk = pool.k.shape[0]
+    group = hq // hk
+    bs = cfg.block_size
+    maxp = page_table.shape[1]
+
+    # Gather per-slot summaries through the page table (cheap: pooled reps).
+    kg_rows = jnp.swapaxes(pool.kg[:, page_table], 0, 1)   # (b, hk, maxp, s, d)
+    vm_rows = jnp.swapaxes(pool.vm[:, page_table], 0, 1)   # (b, hk, maxp)
+
+    m = decode_lib.decode_block_metric(q, kg_rows, vm_rows, cfg)
+    sel = decode_lib.select_decode_blocks(m, cache_lens, cfg, budget_frac)
+
+    # Logical slot index -> global page id, then fetch only selected pages.
+    gp = jnp.take_along_axis(
+        jnp.broadcast_to(page_table[:, None, None, :],
+                         (b, hk, group, maxp)),
+        sel.indices, axis=-1)                               # (b, hk, g, kmax)
+
+    def fetch(kp, vp, gph):
+        # kp, vp: (P, page, d); gph: (b, g, kmax) -> (b, g, kmax, page, d)
+        return kp[gph], vp[gph]
+
+    gk, gv = jax.vmap(fetch, in_axes=(0, 0, 1), out_axes=1)(
+        pool.k, pool.v, gp)                                 # (b,hk,g,kmax,bs,d)
+    return decode_lib.attend_selected(q, gk, gv, sel, cache_lens, bs)
+
+
+# ---------------------------------------------------------------------------
+# Host-side page allocator (pure python; page 0 reserved)
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Free-list page allocator over a fixed pool.  Page 0 (the trash page
+    for inactive slots) is never handed out."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))  # pop() -> lowest id
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list]:
+        """Return n page ids, or None (allocation is all-or-nothing)."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if not (0 < p < self.num_pages):
+                raise ValueError(f"bad page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)

@@ -1,0 +1,114 @@
+"""Property-based invariants of the decode-side block selection.
+
+``core.decode.select_decode_blocks`` feeds both the contiguous sparse
+decode and the paged engine, so its invariants are load-bearing for
+serving correctness:
+
+  1. forced sink + local blocks are always among the live selected set;
+  2. the live block count never exceeds the static ``k_max`` bound
+     (``decode_budget_bound``) — the gather width the executors allocate;
+  3. no live selected block index falls at/beyond ``ceil(len / block)``.
+
+Runs under ``hypothesis`` when installed; degrades to fixed-seed
+parametrized sampling via ``_hypothesis_compat`` otherwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to fixed-seed parametrized sampling
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import StemConfig
+from repro.core.decode import decode_budget_bound, select_decode_blocks
+
+BLOCK_SIZES = (16, 32, 64)
+
+
+def _selection(seed, b, hk, group, nblk, lens, cfg, budget_frac):
+    m = jax.random.normal(jax.random.PRNGKey(seed), (b, hk, group, nblk),
+                          jnp.float32) * 3.0
+    return select_decode_blocks(m, jnp.asarray(lens, jnp.int32), cfg,
+                                budget_frac)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    bs_idx=st.integers(0, len(BLOCK_SIZES) - 1),
+    nblk=st.integers(2, 24),
+    b=st.integers(1, 4),
+    group=st.integers(1, 4),
+    budget_frac=st.floats(0.0, 1.0),
+    sink=st.integers(0, 2),
+    local=st.integers(1, 2),
+    len_frac=st.floats(0.05, 1.0),
+)
+def test_selection_invariants(seed, bs_idx, nblk, b, group, budget_frac,
+                              sink, local, len_frac):
+    bs = BLOCK_SIZES[bs_idx]
+    cfg = StemConfig(block_size=bs, sink_blocks=sink, local_blocks=local,
+                     min_budget_blocks=2, stride=8)
+    # per-row lengths in [1, nblk*bs], deliberately not block-aligned
+    rng = np.random.RandomState(seed)
+    max_len = nblk * bs
+    lens = np.maximum(1, (rng.uniform(0.05, len_frac, size=b)
+                          * max_len).astype(np.int64))
+    sel = _selection(seed, b, 2, group, nblk, lens, cfg, budget_frac)
+    idx = np.asarray(sel.indices)
+    live = np.asarray(sel.live)
+    n_valid = np.asarray(sel.n_valid)
+    k_max = decode_budget_bound(nblk, cfg, budget_frac)
+
+    assert idx.shape[-1] == k_max
+
+    budgets = np.asarray(sel.budgets)
+    for row in range(b):
+        nv = int(n_valid[row])
+        assert nv == -(-int(lens[row]) // bs)
+        live_sets = live[row] & True
+        sel_ids = idx[row]
+        # (2) live count never exceeds the per-row budget (which itself
+        # never exceeds the static k_max gather width)
+        assert int(budgets[row]) <= k_max
+        assert live_sets.sum(axis=-1).max() <= min(budgets[row], nv)
+        # (3) no live selected block beyond ceil(len / block)
+        live_ids = sel_ids[live_sets]
+        if live_ids.size:
+            assert live_ids.max() < nv, (live_ids.max(), nv)
+        # (1) forced sink + local blocks are always in the live set
+        forced = set(range(min(sink, nv))) | set(range(max(0, nv - local), nv))
+        for h in range(live_sets.shape[0]):
+            for g in range(live_sets.shape[1]):
+                got = set(sel_ids[h, g][live_sets[h, g]].tolist())
+                missing = forced - got
+                assert not missing, (
+                    f"row {row} head {h} group {g}: forced {sorted(forced)} "
+                    f"missing {sorted(missing)} (len={lens[row]}, nv={nv})")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    nblk=st.integers(2, 32),
+    budget_frac=st.floats(0.0, 1.0),
+)
+def test_full_budget_selects_every_valid_block(seed, nblk, budget_frac):
+    """At budget_frac=1.0 the live set is exactly the valid prefix — the
+    precondition for the dense-equivalence oracle tests."""
+    cfg = StemConfig(block_size=16, sink_blocks=1, local_blocks=1,
+                     min_budget_blocks=2, stride=8)
+    rng = np.random.RandomState(seed)
+    lens = np.maximum(1, (rng.uniform(0.05, 1.0, size=2) * nblk * 16)
+                      .astype(np.int64))
+    sel = _selection(seed, 2, 2, 2, nblk, lens, cfg, 1.0)
+    idx = np.asarray(sel.indices)
+    live = np.asarray(sel.live)
+    for row in range(2):
+        nv = -(-int(lens[row]) // 16)
+        for h in range(idx.shape[1]):
+            for g in range(idx.shape[2]):
+                got = sorted(idx[row, h, g][live[row, h, g]].tolist())
+                assert got == list(range(nv)), (got, nv)

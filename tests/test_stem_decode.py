@@ -1,4 +1,12 @@
-"""Beyond-paper Stem-sparse decode: selection quality vs full-cache decode."""
+"""Beyond-paper Stem-sparse decode: differential suite vs full-cache decode.
+
+The load-bearing guarantee for the serving engine: at ``budget_frac=1.0``
+every valid cache block is selected, so ``sparse_decode_attention`` must
+reproduce dense decode *exactly* (<= 1e-4 fp32) across GQA group sizes
+{1, 2, 4}, ragged per-sequence cache lengths, and lengths that are not
+multiples of ``block_size``.  Sparse budgets are then checked for selection
+quality (close to dense, better than sink+local streaming).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,19 +34,29 @@ def _setup(seed, b, hq, hk, L, d):
     return q, k, v
 
 
-def _dense_decode(q, k, v, cache_len):
+def _dense_decode(q, k, v, cache_lens):
+    """Full-cache oracle; cache_lens scalar or (b,) per-row valid prefix."""
     b, hq, _, d = q.shape
     hk = k.shape[1]
     g = hq // hk
+    lens = jnp.broadcast_to(jnp.asarray(cache_lens, jnp.int32), (b,))
     qg = q.reshape(b, hk, g, 1, d).astype(jnp.float32)
     s = jnp.einsum("bhgqd,bhld->bhgql", qg, k.astype(jnp.float32)) * (d ** -0.5)
-    s = jnp.where(jnp.arange(k.shape[2]) < cache_len, s, -1e30)
+    valid = jnp.arange(k.shape[2])[None, :] < lens[:, None]        # (b, L)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgql,bhld->bhgqd", p, v.astype(jnp.float32))
     return o.reshape(b, hq, 1, d)
 
 
-@pytest.mark.parametrize("hq,hk", [(4, 4), (4, 2)])
+# ---------------------------------------------------------------------------
+# Differential oracle: budget_frac=1.0 == dense decode, <= 1e-4 fp32
+# ---------------------------------------------------------------------------
+
+GQA_GROUPS = [(4, 4), (4, 2), (4, 1)]   # group sizes 1, 2, 4
+
+
+@pytest.mark.parametrize("hq,hk", GQA_GROUPS)
 def test_full_budget_matches_dense(hq, hk):
     q, k, v = _setup(0, 2, hq, hk, 512, 32)
     cfg = StemConfig(block_size=64, sink_blocks=1, local_blocks=1,
@@ -50,6 +68,53 @@ def test_full_budget_matches_dense(hq, hk):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-5)
 
+
+@pytest.mark.parametrize("hq,hk", GQA_GROUPS)
+def test_full_budget_matches_dense_ragged_lens(hq, hk):
+    """Per-sequence cache lengths, none a multiple of block_size."""
+    b, L, d = 3, 320, 32
+    q, k, v = _setup(3, b, hq, hk, L, d)
+    cfg = StemConfig(block_size=64, sink_blocks=1, local_blocks=1,
+                     min_budget_blocks=2, stride=8)
+    summ = summarize_cache(k, v, cfg)
+    lens = jnp.asarray([317, 130, 65], jnp.int32)   # all % 64 != 0
+    got = sparse_decode_attention(q, k, v, summ, lens, cfg, budget_frac=1.0)
+    want = _dense_decode(q, k, v, lens)
+    err = np.max(np.abs(np.asarray(got) - np.asarray(want)))
+    assert err <= 1e-4, f"group={hq//hk}: max|err|={err}"
+
+
+@pytest.mark.parametrize("cache_len", [63, 64, 65, 127, 190])
+def test_full_budget_matches_dense_unaligned_scalar(cache_len):
+    """Scalar cache_len not a multiple of block_size (partial last block)."""
+    q, k, v = _setup(4, 2, 4, 2, 256, 32)
+    cfg = StemConfig(block_size=64, sink_blocks=1, local_blocks=1,
+                     min_budget_blocks=2, stride=8)
+    summ = summarize_cache(k, v, cfg)
+    clen = jnp.asarray(cache_len, jnp.int32)
+    got = sparse_decode_attention(q, k, v, summ, clen, cfg, budget_frac=1.0)
+    want = _dense_decode(q, k, v, clen)
+    err = np.max(np.abs(np.asarray(got) - np.asarray(want)))
+    assert err <= 1e-4, f"cache_len={cache_len}: max|err|={err}"
+
+
+def test_scalar_and_vector_lens_agree():
+    """A (b,) vector of identical lengths must equal the scalar path."""
+    q, k, v = _setup(5, 3, 4, 2, 256, 16)
+    cfg = StemConfig(block_size=32, sink_blocks=1, local_blocks=1,
+                     min_budget_blocks=2, stride=8)
+    summ = summarize_cache(k, v, cfg)
+    a = sparse_decode_attention(q, k, v, summ, jnp.asarray(200, jnp.int32),
+                                cfg, budget_frac=0.5)
+    bvec = sparse_decode_attention(q, k, v, summ,
+                                   jnp.full((3,), 200, jnp.int32),
+                                   cfg, budget_frac=0.5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(bvec))
+
+
+# ---------------------------------------------------------------------------
+# Sparse budgets: selection quality
+# ---------------------------------------------------------------------------
 
 def test_sparse_budget_close_to_dense():
     q, k, v = _setup(1, 2, 4, 2, 1024, 32)
@@ -81,5 +146,22 @@ def test_partial_cache_masking():
     v2 = v.at[:, :, 300:].set(99.0)
     out2 = sparse_decode_attention(q, k2, v2, summarize_cache(k2, v2, cfg),
                                    clen, cfg, budget_frac=1.0)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_partial_cache_masking_ragged():
+    """Per-row poison: each row ignores its own invalid tail independently."""
+    q, k, v = _setup(7, 3, 4, 2, 256, 16)
+    cfg = StemConfig(block_size=32, sink_blocks=1, local_blocks=1,
+                     min_budget_blocks=2, stride=8)
+    lens = jnp.asarray([250, 100, 33], jnp.int32)
+    out1 = sparse_decode_attention(q, k, v, summarize_cache(k, v, cfg),
+                                   lens, cfg, budget_frac=1.0)
+    mask = jnp.arange(256)[None, None, :, None] >= lens[:, None, None, None]
+    k2 = jnp.where(mask, 99.0, k)
+    v2 = jnp.where(mask, 99.0, v)
+    out2 = sparse_decode_attention(q, k2, v2, summarize_cache(k2, v2, cfg),
+                                   lens, cfg, budget_frac=1.0)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                rtol=1e-4, atol=1e-5)
