@@ -1,0 +1,120 @@
+"""Policy-stack smoke benchmark: named policies through the shared executor.
+
+Runs three registered ``SparsityPolicy`` compositions — ``stem`` (OAM x
+TPD x top-k), ``uniform-sam`` (routing x uniform x top-k) and
+``streaming`` (content-free x sink-local x top-k) — through the *same*
+``sparse_attention`` entry point and XLA gather executor at seq=8192
+(``--quick``: 1024), and reports per-policy prefill wall-clock, realized
+density, and reconstruction error against the dense oracle.  The point is
+the API claim, measured: swapping the policy swaps the selection rule
+only; the executor, stats, and error accounting are shared.
+
+Writes ``BENCH_policy.json`` so CI keeps a policy-coverage trajectory
+across PRs (next to ``BENCH_ragged.json`` / ``BENCH_serving.json``).
+
+Standalone: ``PYTHONPATH=src python benchmarks/policy_parity.py [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_policy, sparse_attention
+from repro.core.sparse_attention import dense_attention_auto
+
+POLICY_NAMES = ("stem", "uniform-sam", "streaming")
+
+
+def bench_policy(name: str, block_size: int):
+    """Registered policy rescaled from paper geometry to the bench shape
+    (comparable budgets: k_start 25% of blocks, small stability floors)."""
+    return get_policy(name).with_updates(
+        block_size=block_size, stride=16, sink_blocks=1, local_blocks=1,
+        min_budget_blocks=2, k_start_frac=0.25, mu=0.5,
+        ignore_missing=True)
+
+
+def timer(fn, *args, repeats=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run_bench(quick: bool) -> dict:
+    seq = 1024 if quick else 8192
+    block = 64 if quick else 128
+    b, hq, hk, d = 1, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, seq, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, hk, seq, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, hk, seq, d), jnp.bfloat16)
+
+    dense = np.asarray(
+        dense_attention_auto(q, k, v, causal=True), np.float32)
+
+    cells = []
+    for name in POLICY_NAMES:
+        pol = bench_policy(name, block)
+        fn = functools.partial(                 # sparse_attention is jitted
+            sparse_attention, policy=pol, executor="xla", return_stats=True)
+        out, stats = fn(q, k, v)
+        dt = timer(lambda: fn(q, k, v))
+        err = float(np.abs(np.asarray(out, np.float32) - dense).max())
+        cell = {
+            "policy": name,
+            "us_per_call": dt * 1e6,
+            "density": float(stats.density),
+            "avg_budget_blocks": float(stats.avg_budget_blocks),
+            "k_max": int(stats.k_max),
+            "max_abs_err_vs_dense": err,
+        }
+        print(f"{name:>12}: {dt*1e3:8.1f} ms/call, density "
+              f"{cell['density']:.3f}, max|err| {err:.3e}", flush=True)
+        cells.append(cell)
+    return {
+        "benchmark": "policy_parity",
+        "mode": "quick" if quick else "full",
+        "backend": jax.default_backend(),
+        "seq": seq,
+        "block_size": block,
+        "shape": {"batch": b, "q_heads": hq, "kv_heads": hk, "head_dim": d},
+        "cells": cells,
+    }
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py entry point: one CSV row per policy."""
+    report = run_bench(quick)
+    return [(
+        f"policy_parity/{c['policy']}",
+        c["us_per_call"],
+        f"density={c['density']:.3f};err={c['max_abs_err_vs_dense']:.2e}",
+    ) for c in report["cells"]]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: seq=1024, block=64")
+    ap.add_argument("--out", default="BENCH_policy.json")
+    args = ap.parse_args()
+
+    report = run_bench(args.quick)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

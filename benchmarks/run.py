@@ -14,6 +14,9 @@ accuracy benchmarks).  Mapping to the paper:
                           also writes BENCH_ragged.json standalone)
   serving.py              continuous-batching engine A/B, stem-on vs
                           stem-off (writes BENCH_serving.json standalone)
+  policy_parity.py        named SparsityPolicy stack (stem / uniform-sam /
+                          streaming) through the shared executor (writes
+                          BENCH_policy.json standalone)
 """
 from __future__ import annotations
 
@@ -23,14 +26,15 @@ import traceback
 
 def main() -> None:
     from benchmarks import (ablation, cost_model, latency, oam_vs_sam,
-                            position_sensitivity, ragged_exec, roofline,
-                            sensitivity, serving)
+                            policy_parity, position_sensitivity, ragged_exec,
+                            roofline, sensitivity, serving)
 
     modules = [
         ("cost_model", cost_model),
         ("latency", latency),
         ("ragged_exec", ragged_exec),
         ("serving", serving),
+        ("policy_parity", policy_parity),
         ("oam_vs_sam", oam_vs_sam),
         ("ablation", ablation),
         ("sensitivity", sensitivity),

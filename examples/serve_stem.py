@@ -1,8 +1,9 @@
 """Serving example: a mixed-length, staggered-arrival request trace through
 the continuous-batching engine with the paged Stem KV cache — the paper's
-deployment scenario, multi-tenant.  The A/B arms share the engine; the
-stem-off arm runs the same paged decode at ``budget_frac=1.0`` (the
-dense-equivalent oracle), so the comparison isolates Stem's selection.
+deployment scenario, multi-tenant.  All arms share the engine and are
+declared via the policy registry (``--policy``); the dense arm runs the
+same paged decode at ``budget_frac=1.0`` (the dense-equivalent oracle), so
+the comparisons isolate each policy's selection rule.
 
   PYTHONPATH=src python examples/serve_stem.py
 """
@@ -19,11 +20,15 @@ COMMON = [
 def main():
     print("== dense-equivalent decode (budget_frac=1.0) ==")
     dense = serve_mod.main(COMMON)
-    print("\n== Stem-sparse decode (budget_frac=0.5) ==")
-    stem = serve_mod.main(COMMON + ["--stem", "--budget-frac", "0.5"])
+    print("\n== Stem-sparse decode (--policy stem, budget_frac=0.5) ==")
+    stem = serve_mod.main(COMMON + ["--policy", "stem", "--budget-frac", "0.5"])
+    print("\n== StreamingLLM decode (--policy streaming: sink+local pages) ==")
+    streaming = serve_mod.main(COMMON + ["--policy", "streaming"])
     print(f"\nthroughput dense {dense['throughput_tok_s']:.1f} tok/s vs stem "
-          f"{stem['throughput_tok_s']:.1f} tok/s; per-token p50 "
-          f"{dense['p50_ms']:.2f} -> {stem['p50_ms']:.2f} ms "
+          f"{stem['throughput_tok_s']:.1f} tok/s vs streaming "
+          f"{streaming['throughput_tok_s']:.1f} tok/s; per-token p50 "
+          f"{dense['p50_ms']:.2f} -> {stem['p50_ms']:.2f} -> "
+          f"{streaming['p50_ms']:.2f} ms "
           f"(CPU proxy; roofline analysis covers the TPU story)")
 
 

@@ -1,41 +1,65 @@
 """Training-free sparse-attention baselines the paper compares against.
 
-All baselines emit a ``BlockSelection`` so they share Stem's executors —
-budget accounting and reconstruction-error comparisons are therefore
-apples-to-apples:
+Every baseline is now a registered ``SparsityPolicy`` (core/policy.py) —
+one declarative composition of metric x schedule x selector — so all of
+them share Stem's executors *and* automatically work on the decode and
+paged-serving paths.  Budget accounting and reconstruction-error
+comparisons are therefore apples-to-apples:
 
-  * ``uniform_sam``      — uniform Top-k over routing-only scores.  This is
-                           the paper's ablation baseline (Table 5, row
-                           "Uniform"); with k_uni = k_start (1+mu)/2 it is
-                           budget-matched to TPD.
-  * ``streaming``        — StreamingLLM-style static sink + local window.
-  * ``xattention_like``  — anti-diagonal block scores + per-row softmax +
-                           cumulative-mass threshold tau (XAttention's
-                           selection rule), converted to a block mask.
+  * ``"uniform-sam"``   — uniform Top-k over routing-only scores.  This is
+                          the paper's ablation baseline (Table 5, row
+                          "Uniform"); with k_uni = k_start (1+mu)/2 it is
+                          budget-matched to TPD.
+  * ``"streaming"``     — StreamingLLM-style static sink + local window
+                          (content-free metric + sink-local schedule).
+  * ``"xattention"``    — anti-diagonal block scores + per-row softmax +
+                          cumulative-mass threshold tau (XAttention's
+                          selection rule).
+
+The ``*_selection`` functions below are thin compatibility wrappers that
+build the policy equivalent of a legacy ``StemConfig`` + keyword arguments
+and return its ``BlockSelection`` — ``tests/test_policy.py`` pins them
+bit-for-bit against hand-composed policies.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import metric as metric_lib
+from repro.core import policy as policy_lib
 from repro.core import schedule as schedule_lib
 from repro.core import selection as selection_lib
-from repro.core import sparse_attention as sa
-from repro.core.config import StemConfig
+from repro.core.sparse_attention import sparse_attention
+from repro.core.config import StemConfig, uniform_equivalent_budget  # noqa: F401
+# (uniform_equivalent_budget is re-exported at module level — historically it
+# was imported inside a function body; the budget-matched default now lives
+# in policy.UniformSchedule, which uses it directly.)
 
 NEG_INF = -1e30
 
 
 def uniform_budgets(nq: int, nk: int, k_uni: int) -> jnp.ndarray:
-    """Constant budget, causally clamped."""
-    offset = nk - nq
-    i = jnp.arange(nq)
-    admissible = jnp.minimum(i + 1 + offset, nk)
-    return jnp.minimum(jnp.full((nq,), k_uni, jnp.int32), admissible.astype(jnp.int32))
+    """Constant budget, causally clamped (jnp view of the uniform schedule)."""
+    return schedule_lib.budgets_as_jax(
+        schedule_lib.uniform_budget_blocks(nq, nk, k_uni))
+
+
+def uniform_sam_policy(cfg: StemConfig,
+                       k_uni: Optional[int] = None) -> policy_lib.SparsityPolicy:
+    """The ``"uniform-sam"`` baseline scaled to a legacy config's geometry.
+
+    ``k_uni=None`` keeps the budget-matched default (Table 5):
+    k_uni = k_start (1+mu)/2, computed from the config's k_start rule.
+    """
+    sam = dataclasses.replace(cfg, metric="sam", mu=1.0)
+    return policy_lib.as_policy(sam).with_updates(
+        schedule=policy_lib.UniformSchedule(
+            k_blocks=k_uni, k_start_frac=cfg.k_start_frac, mu=cfg.mu,
+            min_budget_blocks=cfg.min_budget_blocks))
 
 
 def uniform_sam_selection(
@@ -46,42 +70,42 @@ def uniform_sam_selection(
     k_uni: Optional[int] = None,
 ) -> selection_lib.BlockSelection:
     """Uniform Top-k with the Score-Aware Metric (routing only)."""
-    sam_cfg = StemConfig(**{**cfg.__dict__, "metric": "sam", "mu": 1.0})
-    m = metric_lib.oam_metric(q, k, v, sam_cfg)
-    group = q.shape[1] // k.shape[1]
-    m = metric_lib.group_reduce_metric(m, group, cfg.group_reduce)
-    nq, nk = m.shape[-2], m.shape[-1]
-    if k_uni is None:
-        from repro.core.config import uniform_equivalent_budget
+    sel, _ = uniform_sam_policy(cfg, k_uni).prefill_select(q, k, v)
+    return sel
 
-        k_uni = uniform_equivalent_budget(cfg.k_start_blocks(k.shape[2]), cfg.mu)
-        k_uni = max(k_uni, min(cfg.min_budget_blocks, nk))
-    budgets = uniform_budgets(nq, nk, k_uni)
-    return selection_lib.select_blocks(
-        m, budgets, int(min(k_uni, nk)),
-        sink_blocks=cfg.sink_blocks, local_blocks=cfg.local_blocks,
-    )
+
+def streaming_policy(sink_blocks: int, local_blocks: int,
+                     block_size: int = 128) -> policy_lib.SparsityPolicy:
+    """StreamingLLM at a given window geometry (schedule and selector floors
+    stay consistent by construction)."""
+    return policy_lib.get_policy("streaming").with_updates(
+        block_size=block_size, sink_blocks=sink_blocks,
+        local_blocks=local_blocks)
 
 
 def streaming_selection(
     nq: int, nk: int, batch: int, heads: int, sink_blocks: int, local_blocks: int
 ) -> selection_lib.BlockSelection:
-    """StreamingLLM: static sink + sliding window at block granularity."""
-    mask2d = selection_lib.forced_block_mask(nq, nk, sink_blocks, local_blocks)
-    block_mask = jnp.broadcast_to(mask2d, (batch, heads, nq, nk))
-    k_max = sink_blocks + local_blocks
-    # Build padded index lists from the static mask.
-    score = jnp.where(mask2d, 1.0, NEG_INF)
-    _, idx = jax.lax.top_k(score, min(k_max, nk))
-    vals = jnp.take_along_axis(score, idx, axis=-1)
-    slot2d = vals > NEG_INF / 2
-    indices = jnp.broadcast_to(jnp.where(slot2d, idx, 0), (batch, heads) + idx.shape)
-    slot_mask = jnp.broadcast_to(slot2d, indices.shape)
-    budgets = mask2d.sum(axis=-1).astype(jnp.int32)
-    return selection_lib.BlockSelection(
-        indices=indices.astype(jnp.int32), slot_mask=slot_mask,
-        block_mask=block_mask, budgets=budgets,
-    )
+    """StreamingLLM: static sink + sliding window at block granularity.
+
+    Shape-only wrapper (the metric is content-free, so no q/k/v needed):
+    runs the ``"streaming"`` policy's selector over a zero metric.
+    """
+    pol = streaming_policy(sink_blocks, local_blocks)
+    metric = jnp.zeros((batch, heads, nq, nk), jnp.float32)
+    budgets = pol.schedule.prefill_budgets(nq, nk, block_size=1, kv_len=nk)
+    return pol.selector.select(
+        metric, schedule_lib.budgets_as_jax(budgets),
+        int(min(sink_blocks + local_blocks, nk)), with_block_mask=True)
+
+
+def xattention_policy(cfg: StemConfig, tau: float = 0.9) -> policy_lib.SparsityPolicy:
+    """The ``"xattention"`` baseline scaled to a legacy config's geometry.
+    No group reduction (per-head thresholding, as in the original)."""
+    return policy_lib.get_policy("xattention").with_updates(
+        block_size=cfg.block_size, stride=cfg.stride, tau=tau,
+        sink_blocks=cfg.sink_blocks, local_blocks=cfg.local_blocks,
+        pooling=cfg.pooling, group_reduce="none")
 
 
 def xattention_like_selection(
@@ -93,32 +117,21 @@ def xattention_like_selection(
 ) -> selection_lib.BlockSelection:
     """XAttention-style: softmax the pooled anti-diagonal scores per row and
     keep the smallest prefix of blocks whose cumulative mass reaches tau."""
-    sam_cfg = StemConfig(**{**cfg.__dict__, "metric": "sam"})
-    m = metric_lib.oam_metric(q, k, v, sam_cfg)  # routing only
-    nq, nk = m.shape[-2], m.shape[-1]
-    causal = selection_lib.causal_block_mask(nq, nk)
-    m = jnp.where(causal, m, NEG_INF)
-    probs = jax.nn.softmax(m, axis=-1)
-    order = jnp.argsort(-probs, axis=-1)
-    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
-    cum = jnp.cumsum(sorted_p, axis=-1)
-    # Keep a block if the cumulative mass *before* it is < tau.
-    keep_sorted = (cum - sorted_p) < tau
-    # Scatter the kept prefix back to block ids.
-    onehot = jax.nn.one_hot(order, nk, dtype=jnp.bool_)
-    block_mask = jnp.any(onehot & keep_sorted[..., None], axis=-2) & causal
-    # Force sink + local for stability (as all block methods do).
-    forced = selection_lib.forced_block_mask(nq, nk, cfg.sink_blocks, cfg.local_blocks)
-    block_mask = block_mask | (forced & causal)
-    k_max = int(nk)
-    score = jnp.where(block_mask, probs + 1.0, NEG_INF)
-    vals, idx = jax.lax.top_k(score, k_max)
-    slot_mask = vals > NEG_INF / 2
-    indices = jnp.where(slot_mask, idx, 0).astype(jnp.int32)
-    budgets = jnp.max(block_mask.sum(axis=-1), axis=(0, 1)).astype(jnp.int32)
-    return selection_lib.BlockSelection(
-        indices=indices, slot_mask=slot_mask, block_mask=block_mask, budgets=budgets
-    )
+    sel, _ = xattention_policy(cfg, tau).prefill_select(q, k, v)
+    return sel
+
+
+def baseline_policy(cfg: StemConfig, method: str,
+                    k_uni: Optional[int] = None) -> policy_lib.SparsityPolicy:
+    """Resolve a legacy baseline name to its policy at ``cfg``'s geometry."""
+    if method == "uniform_sam":
+        return uniform_sam_policy(cfg, k_uni)
+    if method == "streaming":
+        return streaming_policy(cfg.sink_blocks, cfg.local_blocks,
+                                cfg.block_size)
+    if method == "xattention":
+        return xattention_policy(cfg)
+    raise ValueError(f"unknown baseline {method!r}")
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "method", "k_uni"))
@@ -130,23 +143,11 @@ def baseline_attention(
     method: str = "uniform_sam",
     k_uni: Optional[int] = None,
 ):
-    """Run a baseline selection through the shared dense-oracle executor.
+    """Run a baseline policy through the shared dense-oracle executor.
 
     Returns (output, realized_density).
     """
-    b, hq, sq, d = q.shape
-    sk = k.shape[2]
-    nq, nk = sq // cfg.block_size, sk // cfg.block_size
-    if method == "uniform_sam":
-        sel = uniform_sam_selection(q, k, v, cfg, k_uni)
-    elif method == "streaming":
-        sel = streaming_selection(nq, nk, b, hq, cfg.sink_blocks, cfg.local_blocks)
-    elif method == "xattention":
-        sel = xattention_like_selection(q, k, v, cfg)
-    else:
-        raise ValueError(f"unknown baseline {method!r}")
-    token_mask = selection_lib.block_mask_to_token_mask(
-        sel.block_mask, cfg.block_size, cfg.block_size, sq, sk
-    )
-    out = sa.dense_attention(q, k, v, causal=True, scale=d ** -0.5, mask=token_mask)
-    return out, selection_lib.selection_density(sel, nk)
+    out, stats = sparse_attention(
+        q, k, v, baseline_policy(cfg, method, k_uni),
+        executor="dense", return_stats=True)
+    return out, stats.density

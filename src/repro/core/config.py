@@ -11,9 +11,47 @@ import dataclasses
 from typing import Optional
 
 
+def default_k_start_fraction(seq_len: int) -> float:
+    """Paper §3.1 length-dependent rule: 0.2 up to 16k keys, 0.1 above."""
+    return 0.2 if seq_len <= 16384 else 0.1
+
+
+def k_start_blocks_for(k_start_frac: Optional[float], kv_len: int,
+                       block_size: int) -> int:
+    """Initial TPD budget in blocks — the one canonical implementation
+    shared by ``StemConfig`` and the policy schedules."""
+    frac = (default_k_start_fraction(kv_len) if k_start_frac is None
+            else k_start_frac)
+    n_blocks = -(-kv_len // block_size)
+    return max(1, int(frac * n_blocks))
+
+
+def validate_sparse_segment(seg) -> None:
+    """Raise ValueError unless ``seg`` is None or a (lo, hi) number pair
+    with 0 <= lo < hi <= 1 (shared by StemConfig and TPDSchedule)."""
+    if seg is None:
+        return
+    if not (isinstance(seg, tuple) and len(seg) == 2):
+        raise ValueError(f"sparse_segment must be a (lo, hi) 2-tuple, got {seg!r}")
+    lo, hi = seg
+    try:
+        lo, hi = float(lo), float(hi)
+    except (TypeError, ValueError):
+        raise ValueError(f"sparse_segment entries must be numbers, got {seg!r}")
+    if not (0.0 <= lo < hi <= 1.0):
+        raise ValueError(f"sparse_segment needs 0 <= lo < hi <= 1, got {seg!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class StemConfig:
     """Hyper-parameters of Stem (Token Position-Decay + Output-Aware Metric).
+
+    This is the *frozen flag record*: a hashable bag of paper
+    hyper-parameters.  The composable form — and the primary interface of
+    the execution paths — is :class:`repro.core.policy.SparsityPolicy`;
+    ``cfg.policy()`` converts this record into the equivalent policy
+    (OAM/SAM metric x TPD schedule x top-k selector).  Every function that
+    historically took a ``StemConfig`` still does, via that shim.
 
     Attributes:
       block_size: attention block granularity B (MXU-aligned; paper uses 128).
@@ -83,16 +121,25 @@ class StemConfig:
             raise ValueError(f"unknown group_reduce {self.group_reduce!r}")
         if self.backend not in ("xla", "pallas", "dense"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        validate_sparse_segment(self.sparse_segment)
+
+    def policy(self):
+        """The equivalent :class:`repro.core.policy.SparsityPolicy`.
+
+        Deterministic and cached per config, so jit treats repeated
+        conversions of equal configs as the same static argument."""
+        from repro.core import policy as policy_lib  # deferred: avoid cycle
+
+        return policy_lib.policy_from_config(self)
 
     def k_start_fraction(self, seq_len: int) -> float:
         """Paper's length-dependent initial-budget fraction (Section 3.1)."""
         if self.k_start_frac is not None:
             return self.k_start_frac
-        return 0.2 if seq_len <= 16384 else 0.1
+        return default_k_start_fraction(seq_len)
 
     def k_start_blocks(self, seq_len: int) -> int:
-        n_blocks = -(-seq_len // self.block_size)
-        return max(1, int(self.k_start_fraction(seq_len) * n_blocks))
+        return k_start_blocks_for(self.k_start_frac, seq_len, self.block_size)
 
 
 # Budget-matched uniform equivalent used in the paper's ablation (Table 5):

@@ -1,17 +1,18 @@
-"""Beyond-paper extension: Stem-sparse *decode* attention.
+"""Beyond-paper extension: policy-driven sparse *decode* attention.
 
-The paper scopes Stem to the pre-filling phase.  The same two ideas extend
-to decoding against a long KV cache (cf. Quest), and fit our serving stack
-naturally because prefill already computes the block-pooled representations:
+The paper scopes Stem to the pre-filling phase.  The same coarse-to-fine
+shape extends to decoding against a long KV cache (cf. Quest), and fits
+our serving stack naturally because prefill already computes the
+block-pooled representations:
 
   * keep the anti-diagonal-pooled K-block group means and the block
     max-pooled log||V|| alongside the KV cache (tiny: stride x d + 1 floats
     per 128-token block),
-  * each decode step scores cache *blocks* with the Output-Aware Metric
-    against the single query (routing + beta * magnitude), applies a
-    TPD-like budget to the cache (here: a fixed fraction of cache blocks,
-    floored), forces sink + local blocks, and attends exactly over the
-    selected blocks only.
+  * each decode step scores cache *blocks* against the single query with
+    the policy's ``BlockMetric`` (``decode_scores``), applies the policy's
+    budget + selection rule to the cache (for the top-k selector: a fixed
+    fraction of cache blocks, floored, with forced sink + local blocks),
+    and attends exactly over the selected blocks only.
 
 This turns decode attention from O(L) per token to O(k_avg * B) — the same
 coarse-to-fine shape as Algorithm 1 with nq = 1.
@@ -20,11 +21,13 @@ Everything is vectorized over *per-sequence* cache lengths: ``cache_lens``
 may be a scalar (uniform batch, the seed behaviour) or a ``(b,)`` vector
 (continuous batching — every row carries its own valid prefix, lengths need
 not be multiples of ``block_size``).  The pipeline is factored into three
-stages shared with the paged-cache executor (``runtime/paged.py``):
+stages shared with the paged-cache executor (``runtime/paged.py``); all of
+them accept a ``SparsityPolicy``, a registered policy name, or a legacy
+``StemConfig`` (converted via ``cfg.policy()``):
 
-  ``decode_block_metric``  — OAM score of the query vs every cache block;
-  ``select_decode_blocks`` — per-row budget + validity + forced floors,
-                             static-width top-k;
+  ``decode_block_metric``  — policy metric of the query vs every cache block;
+  ``select_decode_blocks`` — policy budget + validity + forced floors
+                             (``Selector.select_decode``);
   ``attend_selected``      — exact masked attention over gathered blocks.
 """
 from __future__ import annotations
@@ -36,8 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metric as metric_lib
-from repro.core import selection as selection_lib
-from repro.core.config import StemConfig
+from repro.core import policy as policy_lib
+from repro.core.selection import DecodeSelection  # noqa: F401  (re-export)
 
 NEG_INF = -1e30
 # summarize_cache() of an all-zero block yields this v_mag (log of the norm
@@ -52,11 +55,13 @@ class BlockSummary(NamedTuple):
     v_mag: jnp.ndarray      # (b, hk, nblocks) max-pooled log ||V||
 
 
-def summarize_cache(k: jnp.ndarray, v: jnp.ndarray, cfg: StemConfig) -> BlockSummary:
-    """k, v: (b, hk, L, d) with L % block_size == 0."""
+def summarize_cache(k: jnp.ndarray, v: jnp.ndarray, cfg) -> BlockSummary:
+    """k, v: (b, hk, L, d) with L % block_size == 0.  ``cfg``: StemConfig,
+    SparsityPolicy or policy name (block_size/stride are read off it)."""
+    p = policy_lib.as_policy(cfg)
     return BlockSummary(
-        k_groups=metric_lib.antidiag_pool(k, cfg.block_size, cfg.stride),
-        v_mag=metric_lib.value_block_magnitude(v, cfg.block_size),
+        k_groups=metric_lib.antidiag_pool(k, p.block_size, p.stride),
+        v_mag=metric_lib.value_block_magnitude(v, p.block_size),
     )
 
 
@@ -65,92 +70,35 @@ def summarize_cache(k: jnp.ndarray, v: jnp.ndarray, cfg: StemConfig) -> BlockSum
 # ---------------------------------------------------------------------------
 
 def decode_block_metric(q: jnp.ndarray, k_groups: jnp.ndarray,
-                        v_mag: jnp.ndarray, cfg: StemConfig) -> jnp.ndarray:
-    """OAM at block granularity for one decode query per sequence.
+                        v_mag: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Policy metric at block granularity for one decode query per sequence.
 
     q: (b, hq, 1, d); k_groups: (b, hk, n, stride, d); v_mag: (b, hk, n).
     Returns (b, hk, group, n) float32 — higher = more important.
     """
-    b, hq, _, d = q.shape
-    hk = k_groups.shape[1]
-    group = hq // hk
-    qg = q.reshape(b, hk, group, 1, d).astype(jnp.float32)
-    kg = k_groups.astype(jnp.float32)
-    # mean over groups == block mean-logit approximation for one query
-    route = jnp.einsum("bhgqd,bhnsd->bhgqn", qg, kg) / (
-        kg.shape[-2] * jnp.sqrt(jnp.asarray(d, jnp.float32)))
-    route = route[:, :, :, 0]                                    # (b,hk,g,n)
-    return route + cfg.beta * jnp.maximum(v_mag, 0.0)[:, :, None, :]
+    return policy_lib.as_policy(cfg).decode_scores(q, k_groups, v_mag)
 
 
 # ---------------------------------------------------------------------------
 # Stage 2: per-row budget + static-width top-k selection
 # ---------------------------------------------------------------------------
 
-class DecodeSelection(NamedTuple):
-    """Per-row cache-block selection for one decode step.
-
-    indices: (b, hk, g, k_max) int32 *logical* block ids (slot-local order);
-      dead slots are masked by ``live``.
-    live: (b, hk, g, k_max) bool — slot carries a selected, in-budget,
-      valid block.
-    budgets: (b,) int32 per-row block budget actually applied.
-    n_valid: (b,) int32 ceil(cache_len / block_size) per row.
-    """
-
-    indices: jnp.ndarray
-    live: jnp.ndarray
-    budgets: jnp.ndarray
-    n_valid: jnp.ndarray
-
-
-def decode_budget_bound(nblk: int, cfg: StemConfig, budget_frac: float) -> int:
-    """Static top-k width: the dynamic per-row budget never exceeds
-    ceil(nblk * budget_frac) + min_budget_blocks, and the forced sink/local
-    floors ride on top (they carry FORCE_BONUS, so they occupy the leading
-    top-k slots).  Keeps the block gather O(k_avg * B), not O(L)."""
-    k_max = min(
-        nblk,
-        int(np.ceil(nblk * budget_frac)) + cfg.min_budget_blocks
-        + cfg.sink_blocks + cfg.local_blocks,
-    )
-    return max(k_max, 1)
+def decode_budget_bound(nblk: int, cfg, budget_frac: float) -> int:
+    """Static top-k width of the policy's decode selection — the gather
+    width the executors allocate (O(k_avg * B), not O(L), for budget-driven
+    selectors)."""
+    return policy_lib.as_policy(cfg).decode_budget_bound(nblk, budget_frac)
 
 
 def select_decode_blocks(
     m: jnp.ndarray,                       # (b, hk, g, nblk) coarse metric
     cache_lens: jnp.ndarray,              # scalar or (b,) valid prefix
-    cfg: StemConfig,
+    cfg,
     budget_frac: float = 0.25,
 ) -> DecodeSelection:
-    """TPD-style budget + forced sink/local floors, vectorized per row."""
-    b, _, _, nblk = m.shape
-    bs = cfg.block_size
-    cache_lens = jnp.broadcast_to(jnp.asarray(cache_lens, jnp.int32), (b,))
-
-    n_valid = (cache_lens + bs - 1) // bs                        # (b,)
-    # forced sink/local floors ride on top of the budget: the per-row union
-    # of sink + local blocks is min(n_valid, sink + local) wide, and every
-    # forced block must stay live regardless of budget_frac.
-    n_forced = jnp.minimum(
-        n_valid, jnp.int32(cfg.sink_blocks + cfg.local_blocks))
-    k_budget = jnp.maximum(
-        jnp.maximum(jnp.int32(cfg.min_budget_blocks), n_forced),
-        (n_valid * budget_frac).astype(jnp.int32))               # (b,)
-    blk = jnp.arange(nblk)
-    is_valid = blk[None, :] < n_valid[:, None]                   # (b, n)
-    is_sink = blk < cfg.sink_blocks                              # (n,)
-    is_local = (blk[None, :] >= n_valid[:, None] - cfg.local_blocks) & is_valid
-    forced = (is_sink[None, :] | is_local)[:, None, None, :]     # (b,1,1,n)
-    biased = jnp.where(forced, m + selection_lib.FORCE_BONUS, m)
-    biased = jnp.where(is_valid[:, None, None, :], biased, NEG_INF)
-
-    k_max = decode_budget_bound(nblk, cfg, budget_frac)
-    vals, idx = jax.lax.top_k(biased, k_max)                     # (b,hk,g,kmax)
-    live = (vals > NEG_INF / 2) & (
-        jnp.arange(k_max)[None, None, None, :] < k_budget[:, None, None, None])
-    return DecodeSelection(indices=idx.astype(jnp.int32), live=live,
-                           budgets=k_budget, n_valid=n_valid)
+    """Policy budget + forced floors + validity, vectorized per row."""
+    return policy_lib.as_policy(cfg).decode_select(
+        m, cache_lens, budget_frac=budget_frac)
 
 
 # ---------------------------------------------------------------------------
@@ -189,10 +137,10 @@ def sparse_decode_attention(
     cache_v: jnp.ndarray,
     summary: BlockSummary,
     cache_lens: Union[jnp.ndarray, int],   # scalar or (b,) valid prefixes
-    cfg: StemConfig,
+    cfg,
     budget_frac: float = 0.25,
 ) -> jnp.ndarray:
-    """OAM block selection + exact attention over selected cache blocks.
+    """Policy block selection + exact attention over selected cache blocks.
 
     ``cache_lens`` is per-sequence: a scalar applies one length to every
     row; a ``(b,)`` vector gives each row its own valid prefix (lengths not
@@ -200,13 +148,14 @@ def sparse_decode_attention(
     partial block).  At ``budget_frac=1.0`` every valid block is selected,
     so the result equals dense decode over each row's prefix exactly.
     """
+    policy = policy_lib.as_policy(cfg)
     b, hq, _, d = q.shape
     hk = cache_k.shape[1]
-    bs = cfg.block_size
+    bs = policy.block_size
     nblk = cache_k.shape[2] // bs
 
-    m = decode_block_metric(q, summary.k_groups, summary.v_mag, cfg)
-    sel = select_decode_blocks(m, cache_lens, cfg, budget_frac)
+    m = policy.decode_scores(q, summary.k_groups, summary.v_mag)
+    sel = policy.decode_select(m, cache_lens, budget_frac=budget_frac)
 
     dv = cache_v.shape[-1]
     kb = cache_k.reshape(b, hk, nblk, bs, d)

@@ -14,6 +14,11 @@ Implements the coarse metric of Algorithm 1 (lines 4-6 and 11-13):
   * metric assembly (Eq. 7):  M = QK^T/sqrt(d) + beta * max(0, M_V).
 
 Shapes use the (batch, heads, seq, head_dim) convention.
+
+The explicit-argument entry points (``blockwise_routing_scores``,
+``oam_scores``, ``decode_routing_scores``) are what the policy metrics in
+``core/policy.py`` call; the ``*(…, cfg)`` wrappers keep the historical
+flag-record signatures working.
 """
 from __future__ import annotations
 
@@ -100,10 +105,19 @@ def value_block_magnitude(v: jnp.ndarray, block_size: int) -> jnp.ndarray:
     return log_norms.reshape(*lead, n_blocks, block_size).max(axis=-1)
 
 
-def routing_scores(
-    q: jnp.ndarray, k: jnp.ndarray, cfg: StemConfig
+def blockwise_routing_scores(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    *,
+    block_size: int,
+    stride: int,
+    pooling: str = "antidiag",
 ) -> jnp.ndarray:
     """Downsampled routing scores between all (query block, key block) pairs.
+
+    Explicit-argument form consumed by the policy metrics
+    (``core/policy.py``); ``routing_scores(q, k, cfg)`` is the flag-record
+    wrapper.
 
     Args:
       q: (batch, q_heads, seq_q, d)
@@ -117,23 +131,38 @@ def routing_scores(
     if hq % hk != 0:
         raise ValueError(f"q_heads {hq} not a multiple of kv_heads {hk}")
     group = hq // hk
-    if cfg.pooling == "antidiag":
-        qp = antidiag_pool(q, cfg.block_size, cfg.stride)  # (b, hq, nq, s, d)
-        kp = antidiag_pool(k, cfg.block_size, cfg.stride)  # (b, hk, nk, s, d)
+    if pooling == "antidiag":
+        qp = antidiag_pool(q, block_size, stride)  # (b, hq, nq, s, d)
+        kp = antidiag_pool(k, block_size, stride)  # (b, hk, nk, s, d)
         kp = jnp.repeat(kp, group, axis=1)
         return antidiag_routing_scores(qp, kp, d)
-    qp = mean_pool(q, cfg.block_size)
-    kp = jnp.repeat(mean_pool(k, cfg.block_size), group, axis=1)
+    qp = mean_pool(q, block_size)
+    kp = jnp.repeat(mean_pool(k, block_size), group, axis=1)
     return mean_routing_scores(qp, kp, d)
 
 
-def oam_metric(
+def routing_scores(
+    q: jnp.ndarray, k: jnp.ndarray, cfg: StemConfig
+) -> jnp.ndarray:
+    """Flag-record wrapper over :func:`blockwise_routing_scores`."""
+    return blockwise_routing_scores(
+        q, k, block_size=cfg.block_size, stride=cfg.stride, pooling=cfg.pooling
+    )
+
+
+def oam_scores(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
-    cfg: StemConfig,
+    *,
+    block_size: int,
+    stride: int,
+    pooling: str = "antidiag",
+    beta: float = 0.2,
 ) -> jnp.ndarray:
-    """Full coarse metric of Eq. (7) at block granularity.
+    """Full coarse metric of Eq. (7) at block granularity (explicit args).
+
+    ``beta = 0`` degenerates to the routing-only Score-Aware Metric.
 
     Args:
       q: (batch, q_heads, seq_q, d)
@@ -142,14 +171,48 @@ def oam_metric(
     Returns:
       (batch, q_heads, nq, nk) metric; higher = more important.
     """
-    route = routing_scores(q, k, cfg)
-    if cfg.metric == "sam" or cfg.beta == 0.0:
+    route = blockwise_routing_scores(
+        q, k, block_size=block_size, stride=stride, pooling=pooling
+    )
+    if beta == 0.0:
         return route
     group = q.shape[1] // k.shape[1]
-    mv = value_block_magnitude(v, cfg.block_size)  # (b, hk, nk)
+    mv = value_block_magnitude(v, block_size)  # (b, hk, nk)
     mv = jnp.repeat(mv, group, axis=1)  # (b, hq, nk)
     mag = jnp.maximum(mv, 0.0).astype(route.dtype)
-    return route + cfg.beta * mag[..., None, :]
+    return route + beta * mag[..., None, :]
+
+
+def oam_metric(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: StemConfig,
+) -> jnp.ndarray:
+    """Flag-record wrapper over :func:`oam_scores` (``metric="sam"`` zeroes
+    the value-magnitude term, matching the ablation baseline)."""
+    return oam_scores(
+        q, k, v,
+        block_size=cfg.block_size, stride=cfg.stride, pooling=cfg.pooling,
+        beta=cfg.beta if cfg.metric == "oam" else 0.0,
+    )
+
+
+def decode_routing_scores(q: jnp.ndarray, k_groups: jnp.ndarray) -> jnp.ndarray:
+    """Block routing scores for a single decode query per sequence.
+
+    q: (b, hq, 1, d); k_groups: (b, hk, n, stride, d) anti-diag group means.
+    Returns (b, hk, group, n) float32 — the mean-over-groups inner product
+    approximates the block mean logit for one query row.
+    """
+    b, hq, _, d = q.shape
+    hk = k_groups.shape[1]
+    group = hq // hk
+    qg = q.reshape(b, hk, group, 1, d).astype(jnp.float32)
+    kg = k_groups.astype(jnp.float32)
+    route = jnp.einsum("bhgqd,bhnsd->bhgqn", qg, kg) / (
+        kg.shape[-2] * jnp.sqrt(jnp.asarray(d, jnp.float32)))
+    return route[:, :, :, 0]                                     # (b,hk,g,n)
 
 
 def group_reduce_metric(metric: jnp.ndarray, group: int, mode: str) -> jnp.ndarray:

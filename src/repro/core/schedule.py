@@ -9,6 +9,12 @@ All schedule quantities exist at two granularities:
   * token-level k(i) (the paper's formulation), and
   * block-level budgets used by the block-sparse executor (Algorithm 1,
     line 15), which is what the kernels consume.
+
+The numpy budget builders here (``tpd_budget_blocks``,
+``uniform_budget_blocks``, ``dense_budget_blocks``,
+``sink_local_budget_blocks``) back the ``BudgetSchedule`` policy objects in
+``core/policy.py`` — budgets are static per (policy, shape), so they
+resolve at trace time and drive the ragged execution schedule.
 """
 from __future__ import annotations
 
@@ -61,6 +67,44 @@ def tpd_budget_blocks(
     return np.minimum(raw, admissible).astype(np.int32)
 
 
+def uniform_budget_blocks(nq: int, nk: int, k_uni: int) -> np.ndarray:
+    """Constant per-row budget, causally clamped (baseline schedules)."""
+    offset = nk - nq
+    admissible = np.minimum(np.arange(nq, dtype=np.int64) + 1 + offset, nk)
+    return np.minimum(np.full((nq,), k_uni, np.int64), admissible).astype(np.int32)
+
+
+def dense_budget_blocks(nq: int, nk: int) -> np.ndarray:
+    """Every causally admissible block: budgets[i] = min(i+1+offset, nk)."""
+    offset = nk - nq
+    return np.minimum(np.arange(nq, dtype=np.int64) + 1 + offset, nk).astype(np.int32)
+
+
+def sink_local_budget_blocks(nq: int, nk: int, sink: int, local: int) -> np.ndarray:
+    """StreamingLLM budget: per-row count of the forced sink + local blocks
+    (within causal admissibility) — mirrors ``selection.forced_block_mask``."""
+    offset = nk - nq
+    i = np.arange(nq, dtype=np.int64)[:, None]
+    j = np.arange(nk, dtype=np.int64)[None, :]
+    diag = i + offset
+    forced = ((j < sink) | ((j > diag - local) & (j <= diag))) & (j <= diag)
+    return forced.sum(axis=-1).astype(np.int32)
+
+
+def apply_sparse_segment(budgets: np.ndarray, nq: int, nk: int,
+                         sparse_segment) -> np.ndarray:
+    """Fig. 3 analysis overlay: sparsify only rows in [lo*nq, hi*nq); all
+    other rows keep their full causal budgets.  ``sparse_segment=None`` is
+    a no-op.  Shared by ``schedule_for`` and the TPD policy schedule."""
+    if sparse_segment is None:
+        return budgets
+    lo, hi = sparse_segment
+    full = dense_budget_blocks(nq, nk)
+    sel = np.zeros(nq, bool)
+    sel[int(lo * nq): int(hi * nq)] = True
+    return np.where(sel, budgets, full).astype(np.int32)
+
+
 def schedule_for(cfg: StemConfig, seq_len: int, kv_len: int | None = None) -> np.ndarray:
     """Convenience: block-level schedule for a config + sequence length."""
     kv_len = seq_len if kv_len is None else kv_len
@@ -73,15 +117,7 @@ def schedule_for(cfg: StemConfig, seq_len: int, kv_len: int | None = None) -> np
         cfg.mu,
         min_budget_blocks=cfg.min_budget_blocks,
     )
-    if cfg.sparse_segment is not None:
-        # Fig. 3 analysis mode: sparsify only rows in [lo, hi) fractions.
-        lo, hi = cfg.sparse_segment
-        offset = nk - nq
-        full = np.minimum(np.arange(nq, dtype=np.int64) + 1 + offset, nk).astype(np.int32)
-        sel = np.zeros(nq, bool)
-        sel[int(lo * nq): int(hi * nq)] = True
-        budgets = np.where(sel, budgets, full).astype(np.int32)
-    return budgets
+    return apply_sparse_segment(budgets, nq, nk, cfg.sparse_segment)
 
 
 def max_budget_blocks(cfg: StemConfig, seq_len: int, kv_len: int | None = None) -> int:

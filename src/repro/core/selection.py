@@ -54,6 +54,24 @@ class BlockSelection(NamedTuple):
     live_counts: Optional[jnp.ndarray] = None
 
 
+class DecodeSelection(NamedTuple):
+    """Per-row cache-block selection for one decode step (nq = 1).
+
+    indices: (b, hk, g, k_max) int32 *logical* block ids (slot-local order);
+      dead slots are masked by ``live``.
+    live: (b, hk, g, k_max) bool — slot carries a selected, in-budget,
+      valid block.
+    budgets: (b,) int32 per-row block budget actually applied (for
+      threshold selectors: the per-row max over heads of kept blocks).
+    n_valid: (b,) int32 ceil(cache_len / block_size) per row.
+    """
+
+    indices: jnp.ndarray
+    live: jnp.ndarray
+    budgets: jnp.ndarray
+    n_valid: jnp.ndarray
+
+
 class RaggedSegment(NamedTuple):
     """One segment of the budget-sorted ragged execution schedule.
 

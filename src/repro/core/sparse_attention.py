@@ -1,24 +1,31 @@
-"""Stem sparse attention: coarse-to-fine orchestration (Algorithm 1).
+"""Sparse attention execution: policy orchestration (Algorithm 1 shape).
 
-Pipeline per (batch, head):
-  1. pool Q/K anti-diagonally + max-pool log||V|| (metric.py),
-  2. assemble the Output-Aware Metric (Eq. 7),
-  3. per-row TPD budgets (schedule.py) -> Top-k(i) block selection
+Pipeline per (batch, head), for *any* ``SparsityPolicy`` (core/policy.py):
+  1. the policy's ``BlockMetric`` scores key blocks (metric.py),
+  2. its ``BudgetSchedule`` fixes per-row block budgets (schedule.py),
+  3. its ``Selector`` turns scores + budgets into a BlockSelection
      (selection.py),
-  4. exact attention over the selected blocks only.
+  4. an *executor* runs exact attention over the selected blocks only.
 
-Three executors (DESIGN.md describes the contract in detail):
+Executors are resolved through the policy registry
+(``policy.register_executor`` — DESIGN.md describes the contract in
+detail):
   * "xla"    — gather-based flash-style executor in pure jnp.  This is the
                path lowered in the distributed dry-run; it is mathematically
-               identical to the Pallas kernel.  With ``cfg.ragged`` it runs
-               a budget-sorted segment schedule so cost tracks the *average*
-               TPD budget instead of the padded k_max, and with GQA-shared
-               selection it fetches each K/V block once per KV head.
+               identical to the Pallas kernel.  With ``policy.ragged`` it
+               runs a budget-sorted segment schedule so cost tracks the
+               *average* budget instead of the padded k_max, and with
+               GQA-shared selection it fetches each K/V block once per KV
+               head.
   * "pallas" — TPU kernel (kernels/block_sparse_attn.py) driven by the same
                selection indices via scalar prefetch; dead slots revisit the
                previous K/V block (zero new DMAs) and rows finalize at their
                own live count.
   * "dense"  — O(N^2) masked oracle for tests.
+
+``sparse_attention(q, k, v, policy)`` is the primary entry point;
+``stem_attention(q, k, v, cfg)`` is the flag-record shim
+(``policy = cfg.policy()``, executor from ``cfg.backend``).
 """
 from __future__ import annotations
 
@@ -29,8 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import metric as metric_lib
-from repro.core import schedule as schedule_lib
+from repro.core import policy as policy_lib
 from repro.core import selection as selection_lib
 from repro.core.config import StemConfig
 from repro.sharding.context import constrain
@@ -314,89 +320,104 @@ def select_for(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
-    cfg: StemConfig,
+    cfg,
     *,
     with_block_mask: bool = True,
 ) -> tuple[selection_lib.BlockSelection, int]:
-    """Phase 1: metric + schedule + Top-k(i) selection."""
-    sq, sk = q.shape[2], k.shape[2]
-    m = metric_lib.oam_metric(q, k, v, cfg)
-    group = q.shape[1] // k.shape[1]
-    m = metric_lib.group_reduce_metric(m, group, cfg.group_reduce)
-    budgets = schedule_lib.schedule_for(cfg, sq, sk)
-    k_max = int(budgets.max())
-    sel = selection_lib.select_blocks(
-        m,
-        schedule_lib.budgets_as_jax(budgets),
-        k_max,
-        sink_blocks=cfg.sink_blocks,
-        local_blocks=cfg.local_blocks,
-        with_block_mask=with_block_mask,
-    )
-    return sel, k_max
+    """Phase 1: metric + schedule + selection.  ``cfg`` may be a
+    ``StemConfig``, a ``SparsityPolicy`` or a registered policy name."""
+    return policy_lib.as_policy(cfg).prefill_select(
+        q, k, v, with_block_mask=with_block_mask)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "return_stats"))
-def stem_attention(
+# ---------------------------------------------------------------------------
+# Executors (registered under policy.register_executor; resolved by name)
+# ---------------------------------------------------------------------------
+
+def _dense_oracle_executor(q, k, v, sel, *, policy, scale, **_):
+    """O(N^2) masked softmax over the selection's dense block mask."""
+    token_mask = selection_lib.block_mask_to_token_mask(
+        sel.block_mask, policy.block_size, policy.block_size,
+        q.shape[2], k.shape[2])
+    return dense_attention(q, k, v, causal=True, scale=scale, mask=token_mask)
+
+
+def _xla_gather_executor(q, k, v, sel, *, policy, scale, indices, slot_mask,
+                         dedup, budgets, **_):
+    return _gather_executor(
+        q, k, v, indices, slot_mask,
+        block_size=policy.block_size, scale=scale,
+        slot_chunk=policy.slot_chunk, budgets=budgets, group_dedup=dedup)
+
+
+def _pallas_executor(q, k, v, sel, *, policy, scale, indices, slot_mask,
+                     live_counts, dedup, **_):
+    from repro.kernels import ops as kernel_ops  # deferred: optional dep
+
+    return kernel_ops.block_sparse_attention(
+        q, k, v, indices, slot_mask,
+        block_size=policy.block_size, scale=scale, group_dedup=dedup,
+        live_counts=live_counts)
+
+
+policy_lib.register_executor("dense", _dense_oracle_executor,
+                             needs_block_mask=True)
+policy_lib.register_executor("xla", _xla_gather_executor)
+policy_lib.register_executor("pallas", _pallas_executor)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "executor", "return_stats"))
+def sparse_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
-    cfg: StemConfig,
+    policy,
+    executor: Optional[str] = None,
     return_stats: bool = False,
 ):
-    """Stem sparse causal attention (Algorithm 1).
+    """Block-sparse causal attention under a composable ``SparsityPolicy``.
 
     Args:
       q: (batch, q_heads, seq, head_dim)
       k, v: (batch, kv_heads, seq, head_dim)
-      cfg: StemConfig.
+      policy: SparsityPolicy | registered policy name | legacy StemConfig.
+      executor: execution backend name from the executor registry
+        ("xla" | "pallas" | "dense"); None uses ``policy.executor``.
       return_stats: also return StemStats.
 
     Returns:
       (batch, q_heads, seq, head_dim) attention output [, StemStats].
     """
+    policy = policy_lib.as_policy(policy)
+    spec = policy_lib.get_executor(executor or policy.executor)
     b, hq, sq, d = q.shape
     sk = k.shape[2]
     scale = d ** -0.5
-    nk = sk // cfg.block_size
-    # selection_density works from slot_mask, so stats no longer force the
-    # dense block-mask scatter onto the production path.
-    need_mask = cfg.backend == "dense"
-    sel, k_max = select_for(q, k, v, cfg, with_block_mask=need_mask)
+    nk = sk // policy.block_size
+    # selection_density works from slot_mask, so stats never force the
+    # dense block-mask scatter onto a production executor.
+    sel, k_max = policy.prefill_select(
+        q, k, v, with_block_mask=spec.needs_block_mask)
 
     # GQA block dedup: with group-shared selection every query head of a KV
     # group picks identical blocks, so the executors only need the indices
     # of one head per group (DESIGN.md §GQA dedup invariant).
     group = hq // k.shape[1]
-    dedup = cfg.ragged and cfg.group_reduce != "none" and group > 1
+    dedup = policy.ragged and policy.group_reduce != "none" and group > 1
     idx, msk, cnt = sel.indices, sel.slot_mask, sel.live_counts
     if dedup:
         idx, msk, cnt = idx[:, ::group], msk[:, ::group], cnt[:, ::group]
 
-    if cfg.backend == "dense":
-        token_mask = selection_lib.block_mask_to_token_mask(
-            sel.block_mask, cfg.block_size, cfg.block_size, sq, sk
-        )
-        out = dense_attention(q, k, v, causal=True, scale=scale, mask=token_mask)
-    elif cfg.backend == "xla":
-        # TPD budgets are static per (cfg, shape) — recompute in numpy so
-        # the ragged segment schedule resolves at trace time.
-        budgets_np = schedule_lib.schedule_for(cfg, sq, sk) if cfg.ragged else None
-        out = _gather_executor(
-            q, k, v, idx, msk,
-            block_size=cfg.block_size, scale=scale, slot_chunk=cfg.slot_chunk,
-            budgets=budgets_np, group_dedup=dedup,
-        )
-    elif cfg.backend == "pallas":
-        from repro.kernels import ops as kernel_ops  # deferred: optional dep
+    # Budgets are static per (policy, shape) — recompute in numpy so the
+    # ragged segment schedule resolves at trace time.  Threshold selectors
+    # have data-dependent budgets, so they run the padded schedule.
+    budgets_np = None
+    if policy.ragged and policy.selector.budget_driven:
+        budgets_np = policy.prefill_budgets(sq, sk)
 
-        out = kernel_ops.block_sparse_attention(
-            q, k, v, idx, msk,
-            block_size=cfg.block_size, scale=scale, group_dedup=dedup,
-            live_counts=cnt,
-        )
-    else:  # pragma: no cover - config validates
-        raise ValueError(cfg.backend)
+    out = spec.fn(q, k, v, sel, policy=policy, scale=scale, indices=idx,
+                  slot_mask=msk, live_counts=cnt, dedup=dedup,
+                  budgets=budgets_np)
 
     if return_stats:
         stats = StemStats(
@@ -406,3 +427,20 @@ def stem_attention(
         )
         return out, stats
     return out
+
+
+def stem_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: StemConfig,
+    return_stats: bool = False,
+):
+    """Stem sparse causal attention (Algorithm 1) — flag-record shim.
+
+    Stable entry point for existing call sites: converts the frozen
+    ``StemConfig`` into its equivalent ``SparsityPolicy`` (OAM/SAM x TPD x
+    top-k, executor from ``cfg.backend``) and delegates to
+    :func:`sparse_attention`.  Bit-identical to the policy spelling.
+    """
+    return sparse_attention(q, k, v, cfg, return_stats=return_stats)

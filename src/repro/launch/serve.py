@@ -13,10 +13,17 @@ Two modes:
     prompt lengths are right-padded, per-sequence ``cache_lens`` flow
     through ``make_serve_step``, and every row decodes at its own length.
 
-Example:
+The sparsity policy is declarative: ``--policy <name>`` resolves any
+registered ``SparsityPolicy`` (``stem``, ``streaming``, ``uniform-sam``,
+``xattention``, …; see ``core/policy.py``) and rescales it to the serving
+geometry; ``--stem`` keeps the legacy flag-built stem policy.
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \\
       --requests 6 --min-prompt 48 --max-prompt 200 --decode-tokens 16 \\
       --max-slots 4 --stem
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \\
+      --policy streaming --requests 6 --decode-tokens 16
 """
 from __future__ import annotations
 
@@ -160,6 +167,12 @@ def main(argv=None) -> dict:
                     help="request i arrives at engine step i * this")
     ap.add_argument("--stem", action="store_true",
                     help="sparse decode budget (< 1.0); off = dense-equivalent")
+    ap.add_argument("--policy", default=None,
+                    help="named SparsityPolicy from the registry "
+                         "(core/policy.py: stem, stem-sam, uniform-sam, "
+                         "streaming, xattention, ...); default builds the "
+                         "stem policy from StemConfig flags.  Implies the "
+                         "sparse arm unless --budget-frac overrides it")
     ap.add_argument("--budget-frac", type=float, default=0.5)
     ap.add_argument("--block-size", type=int, default=0,
                     help="Stem block/page size; 0 = auto from max prompt")
@@ -184,16 +197,29 @@ def main(argv=None) -> dict:
 
     bs = args.block_size or max(16, min(128, args.max_prompt // 8))
     bs = -(-bs // 8) * 8
-    stem_cfg = StemConfig(block_size=bs, min_budget_blocks=2, sink_blocks=1,
-                          local_blocks=1, stride=4)
-    budget_frac = args.budget_frac if args.stem else 1.0
-    print(f"serve: arch={cfg.name} page/block={bs} "
-          f"stem={'on' if args.stem else 'off'} budget_frac={budget_frac}",
+    if args.policy:
+        # Resolve the named policy and rescale its geometry/stability knobs
+        # to the serving shape (registered defaults carry paper geometry:
+        # B=128 over 8k+ contexts).  ignore_missing: content-free policies
+        # (streaming) have no stride/min_budget fields to rewrite.
+        from repro.core import policy as policy_lib
+        stem_cfg = policy_lib.get_policy(args.policy).with_updates(
+            block_size=bs, stride=4, sink_blocks=1, local_blocks=1,
+            min_budget_blocks=2, ignore_missing=True)
+        sparse = True
+    else:
+        stem_cfg = StemConfig(block_size=bs, min_budget_blocks=2, sink_blocks=1,
+                              local_blocks=1, stride=4)
+        sparse = args.stem
+    budget_frac = args.budget_frac if sparse else 1.0
+    name = args.policy or "stem"
+    print(f"serve: arch={cfg.name} page/block={bs} policy={name} "
+          f"sparse={'on' if sparse else 'off'} budget_frac={budget_frac}",
           flush=True)
 
     if args.fixed_batch:
         return run_fixed_batch(args, cfg, bundle, params,
-                               stem_cfg if args.stem else None)
+                               stem_cfg if sparse else None)
     return run_engine(args, cfg, bundle, params, stem_cfg, budget_frac)
 
 

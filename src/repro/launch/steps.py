@@ -20,13 +20,18 @@ from repro.sharding import rules as rules_lib
 
 PAPER_STEM = StemConfig()   # paper defaults: B=128, mu=0.7, beta=0.2, floor 54
 
+# Every ``stem_cfg`` argument in this module accepts a SparsityPolicy, a
+# registered policy name, or a legacy StemConfig (core/policy.py
+# ``as_policy``); ``policies`` is the per-layer override map forwarded to
+# the transformer ({global layer index: policy}).
+
 
 def default_stem_cfg(cfg: ArchConfig) -> Optional[StemConfig]:
     return PAPER_STEM if cfg.use_stem else None
 
 
 def make_train_step(bundle: registry.ModelBundle, opt_cfg: optim.AdamWConfig,
-                    *, stem_cfg: Optional[StemConfig] = None,
+                    *, stem_cfg=None, policies=None,
                     remat: bool = True, microbatches: int = 1,
                     grad_shardings=None):
     """(opt_state, batch) -> (opt_state, metrics).
@@ -47,7 +52,9 @@ def make_train_step(bundle: registry.ModelBundle, opt_cfg: optim.AdamWConfig,
 
     def loss_of(master, mb):
         params = jax.tree.map(lambda m: m.astype(cfg.jnp_dtype), master)
-        loss, metrics = bundle.loss_fn(params, mb, stem_cfg=stem_cfg, remat=remat)
+        kw = {"policies": policies} if policies else {}
+        loss, metrics = bundle.loss_fn(params, mb, stem_cfg=stem_cfg,
+                                       remat=remat, **kw)
         return loss, metrics
 
     grad_fn = jax.value_and_grad(loss_of, has_aux=True)
@@ -81,9 +88,11 @@ def make_train_step(bundle: registry.ModelBundle, opt_cfg: optim.AdamWConfig,
 
 
 def make_prefill_step(bundle: registry.ModelBundle, *, max_len: int,
-                      stem_cfg: Optional[StemConfig] = None):
+                      stem_cfg=None, policies=None):
     def prefill_step(params, batch):
-        return bundle.prefill(params, batch, max_len=max_len, stem_cfg=stem_cfg)
+        kw = {"policies": policies} if policies else {}
+        return bundle.prefill(params, batch, max_len=max_len,
+                              stem_cfg=stem_cfg, **kw)
     return prefill_step
 
 
@@ -125,8 +134,7 @@ def make_serve_step(bundle: registry.ModelBundle):
 # Paged-engine steps (runtime/engine.py)
 # ---------------------------------------------------------------------------
 
-def make_insert_prefill(bundle: registry.ModelBundle, *,
-                        stem_cfg: StemConfig):
+def make_insert_prefill(bundle: registry.ModelBundle, *, stem_cfg):
     """(params, tokens (1, Lp), true_len, pools, page_row) ->
     (next-token logits (vocab,), pools).
 
@@ -145,8 +153,8 @@ def make_insert_prefill(bundle: registry.ModelBundle, *,
     return insert_prefill
 
 
-def make_batched_decode(bundle: registry.ModelBundle, *,
-                        stem_cfg: StemConfig, budget_frac: float = 1.0):
+def make_batched_decode(bundle: registry.ModelBundle, *, stem_cfg,
+                        budget_frac: float = 1.0):
     """(params, tokens (S,1), pools, page_table (S,P), cache_lens (S,)) ->
     (logits (S, vocab), pools).
 

@@ -1,10 +1,13 @@
-"""Multi-head / grouped-query attention layer with pluggable sparse backend.
+"""Multi-head / grouped-query attention layer with pluggable sparse policy.
 
 Modes:
   * ``full``   — training / prefill over a whole sequence.  Dense flash-style
-    attention by default; when a ``StemConfig`` is supplied and the layer is
-    causal self-attention, the Stem sparse path (core/) is used — this is the
-    paper's technique as a first-class integration point.
+    attention by default; when a sparsity policy is supplied (a
+    ``SparsityPolicy``, a registered policy name, or a legacy ``StemConfig``)
+    and the layer is causal self-attention, the policy-sparse path
+    (core/sparse_attention.sparse_attention) is used — the paper's technique
+    as a first-class integration point, with per-layer policy overrides
+    supported at the transformer level.
   * ``decode`` — one new token against a KV cache (global or ring/windowed).
   * ``cross``  — encoder-decoder cross attention (whisper).
 
@@ -19,9 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import policy as policy_lib
 from repro.core.config import StemConfig
 from repro.core.sparse_attention import (dense_attention, dense_attention_auto,
-                                          stem_attention)
+                                          sparse_attention)
 from repro.models import common
 
 
@@ -124,22 +128,35 @@ def apply_full(
     cfg: ArchConfig,
     *,
     positions: jnp.ndarray,
-    stem_cfg: Optional[StemConfig] = None,
+    stem_cfg=None,
     window: Optional[int] = None,
     use_rope: bool = True,
     causal: bool = True,
-) -> jnp.ndarray:
-    """Training / prefill attention over the full sequence."""
+    return_stats: bool = False,
+):
+    """Training / prefill attention over the full sequence.
+
+    ``stem_cfg``: SparsityPolicy | registered policy name | StemConfig |
+    None (dense).  ``return_stats`` additionally returns the realized
+    ``StemStats`` of the sparse path (None when the dense/local path ran) —
+    the transformer's per-layer density diagnostics use this.
+    """
+    pol = policy_lib.as_policy_opt(stem_cfg)
     q, k, v = _project(params, x, cfg, positions, use_rope=use_rope)
+    stats = None
     if window is not None:
         group = q.shape[1] // k.shape[1]
         o = local_attention(q, jnp.repeat(k, group, axis=1), jnp.repeat(v, group, axis=1), window)
-    elif stem_cfg is not None and causal and x.shape[1] % stem_cfg.block_size == 0 \
-            and x.shape[1] // stem_cfg.block_size >= 2:
-        o = stem_attention(q, k, v, stem_cfg)
+    elif pol is not None and causal and x.shape[1] % pol.block_size == 0 \
+            and x.shape[1] // pol.block_size >= 2:
+        if return_stats:
+            o, stats = sparse_attention(q, k, v, pol, return_stats=True)
+        else:
+            o = sparse_attention(q, k, v, pol)
     else:
         o = dense_attention_auto(q, k, v, causal=causal)
-    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+    return (out, stats) if return_stats else out
 
 
 def apply_decode(
@@ -190,7 +207,7 @@ def apply_decode_paged(
     pool,                            # runtime.paged.PagePool for this layer
     page_table: jnp.ndarray,         # (slots, max_pages) global page ids
     cache_lens: jnp.ndarray,         # (slots,) tokens already cached
-    stem_cfg: StemConfig,
+    stem_cfg,                        # any policy spelling (see apply_full)
     *,
     budget_frac: float = 1.0,
     use_rope: bool = True,
@@ -203,6 +220,7 @@ def apply_decode_paged(
     oracle arm (every valid page attends).  Returns (out, new_pool)."""
     from repro.runtime import paged as paged_lib
 
+    stem_cfg = policy_lib.as_policy(stem_cfg)
     lens = jnp.asarray(cache_lens, jnp.int32)
     q, k_new, v_new = _project(params, x, cfg, lens[:, None], use_rope=use_rope)
     pool = paged_lib.append_token(pool, page_table, lens, k_new, v_new, stem_cfg)
@@ -251,10 +269,12 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
 
 def prefill_into_cache(
     params, x, cfg: ArchConfig, *, positions, max_len: int,
-    stem_cfg: Optional[StemConfig] = None, window: Optional[int] = None,
+    stem_cfg=None, window: Optional[int] = None,
     use_rope: bool = True,
 ):
-    """Prefill attention AND return the populated cache for decode."""
+    """Prefill attention AND return the populated cache for decode.
+    ``stem_cfg`` accepts any policy spelling (see ``apply_full``)."""
+    stem_cfg = policy_lib.as_policy_opt(stem_cfg)
     q, k, v = _project(params, x, cfg, positions, use_rope=use_rope)
     if window is not None:
         group = q.shape[1] // k.shape[1]
@@ -268,7 +288,7 @@ def prefill_into_cache(
     else:
         if stem_cfg is not None and x.shape[1] % stem_cfg.block_size == 0 \
                 and x.shape[1] // stem_cfg.block_size >= 2:
-            o = stem_attention(q, k, v, stem_cfg)
+            o = sparse_attention(q, k, v, stem_cfg)
         else:
             o = dense_attention_auto(q, k, v, causal=True)
         L = max_len

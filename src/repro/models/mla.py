@@ -12,14 +12,14 @@ DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MLAConfig
-from repro.core.config import StemConfig
-from repro.core.sparse_attention import dense_attention_auto, stem_attention
+from repro.core import policy as policy_lib
+from repro.core.sparse_attention import dense_attention_auto, sparse_attention
 from repro.models import common
 
 
@@ -74,20 +74,27 @@ def _expand(params, c, kr, cfg: ArchConfig):
 
 def apply_full(
     params, x, cfg: ArchConfig, *, positions,
-    stem_cfg: Optional[StemConfig] = None,
-) -> jnp.ndarray:
+    stem_cfg=None, return_stats: bool = False,
+):
+    """``stem_cfg``: SparsityPolicy | policy name | StemConfig | None."""
     m = cfg.mla
+    pol = policy_lib.as_policy_opt(stem_cfg)
     q_nope, q_rope = _queries(params, x, cfg, positions)
     c, kr = _latents(params, x, cfg, positions)
     k, v = _expand(params, c, kr, cfg)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
-    if stem_cfg is not None and x.shape[1] % stem_cfg.block_size == 0 \
-            and x.shape[1] // stem_cfg.block_size >= 2:
-        o = stem_attention(q, k, v, stem_cfg)
+    stats = None
+    if pol is not None and x.shape[1] % pol.block_size == 0 \
+            and x.shape[1] // pol.block_size >= 2:
+        if return_stats:
+            o, stats = sparse_attention(q, k, v, pol, return_stats=True)
+        else:
+            o = sparse_attention(q, k, v, pol)
     else:
         o = dense_attention_auto(q, k, v, causal=True, scale=scale)
-    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+    return (out, stats) if return_stats else out
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> MLACache:
@@ -100,7 +107,7 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) ->
 
 
 def prefill_into_cache(params, x, cfg: ArchConfig, *, positions, max_len: int,
-                       stem_cfg: Optional[StemConfig] = None):
+                       stem_cfg=None):
     out = apply_full(params, x, cfg, positions=positions, stem_cfg=stem_cfg)
     c, kr = _latents(params, x, cfg, positions)
     pad = max_len - x.shape[1]

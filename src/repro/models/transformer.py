@@ -15,6 +15,14 @@ segments.  Examples:
 Sub-layer kinds: dense | dense_local | moe | mla_dense | mla_moe | rec | ssd.
 Every kind supports three phases: full (train/prefill), prefill-with-cache,
 and decode-step.
+
+Sparsity is policy-driven: every ``stem_cfg`` argument accepts a
+``SparsityPolicy``, a registered policy name, or a legacy ``StemConfig``,
+and the full/prefill phases additionally take ``policies`` — a
+``{global_layer_index: policy}`` override map, so deep layers can run
+leaner budgets than early ones (the paper's cumulative-dependency
+argument).  Layers with the same effective policy still compile as one
+``lax.scan``; an override only splits the scan at its boundaries.
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import policy as policy_lib
 from repro.core.config import StemConfig
 from repro.models import attention, common, mla, mlp, moe, rglru, ssd
 from repro.sharding.context import constrain
@@ -58,6 +67,43 @@ def layer_program(cfg: ArchConfig) -> list[tuple[int, tuple[str, ...]]]:
     return [(cfg.num_layers, ("dense",))]
 
 
+def num_layer_groups(cfg: ArchConfig) -> int:
+    """Number of layer groups — the index space of per-layer ``policies``."""
+    return sum(n for n, _ in layer_program(cfg))
+
+
+def _layer_policies(cfg: ArchConfig, stem_cfg, policies):
+    """Per-group effective policy list (length ``num_layer_groups``).
+
+    ``policies`` maps a global layer-group index to an override (any policy
+    spelling); unlisted groups use ``stem_cfg``.  Entries are normalized to
+    ``SparsityPolicy`` so equal policies — however spelled — coalesce into
+    one scan run."""
+    total = num_layer_groups(cfg)
+    base = policy_lib.as_policy_opt(stem_cfg)
+    if not policies:
+        return [base] * total
+    bad = sorted(i for i in policies if not (isinstance(i, int) and 0 <= i < total))
+    if bad:
+        raise ValueError(
+            f"policies keys {bad} out of range for {total} layer groups")
+    return [policy_lib.as_policy_opt(policies[i]) if i in policies else base
+            for i in range(total)]
+
+
+def _policy_runs(eff_seg):
+    """Coalesce consecutive equal policies into (start, length, policy) runs
+    — each run compiles as one scan over a static slice of the stacked
+    segment parameters."""
+    runs: list = []
+    for i, p in enumerate(eff_seg):
+        if runs and runs[-1][2] == p:
+            runs[-1] = (runs[-1][0], runs[-1][1] + 1, p)
+        else:
+            runs.append((i, 1, p))
+    return runs
+
+
 # ---------------------------------------------------------------------------
 # Single sub-layer: init / full / prefill / decode
 # ---------------------------------------------------------------------------
@@ -87,18 +133,30 @@ def _init_sublayer(ini: common.Initializer, cfg: ArchConfig, kind: str) -> dict:
 
 
 def _sublayer_full(params, x, cfg: ArchConfig, kind: str, *, positions,
-                   stem_cfg: Optional[StemConfig]):
-    """Returns (x, aux_loss)."""
+                   stem_cfg, return_stats: bool = False):
+    """Returns (x, aux_loss) — or (x, aux_loss, StemStats | None) when
+    ``return_stats`` (stats exist only when the sparse attention path ran)."""
     h = common.rms_norm(x, params["norm1"])
+    stats = None
     if kind in ("dense", "moe"):
-        mix = attention.apply_full(params["attn"], h, cfg, positions=positions,
-                                   stem_cfg=stem_cfg)
+        if return_stats:
+            mix, stats = attention.apply_full(
+                params["attn"], h, cfg, positions=positions,
+                stem_cfg=stem_cfg, return_stats=True)
+        else:
+            mix = attention.apply_full(params["attn"], h, cfg,
+                                       positions=positions, stem_cfg=stem_cfg)
     elif kind == "dense_local":
         mix = attention.apply_full(params["attn"], h, cfg, positions=positions,
                                    stem_cfg=None, window=cfg.rglru.window)
     elif kind in ("mla_dense", "mla_moe"):
-        mix = mla.apply_full(params["attn"], h, cfg, positions=positions,
-                             stem_cfg=stem_cfg)
+        if return_stats:
+            mix, stats = mla.apply_full(params["attn"], h, cfg,
+                                        positions=positions, stem_cfg=stem_cfg,
+                                        return_stats=True)
+        else:
+            mix = mla.apply_full(params["attn"], h, cfg, positions=positions,
+                                 stem_cfg=stem_cfg)
     elif kind == "rec":
         mix = rglru.apply_full(params["mixer"], h, cfg)
     elif kind == "ssd":
@@ -106,13 +164,14 @@ def _sublayer_full(params, x, cfg: ArchConfig, kind: str, *, positions,
     x = constrain(x + mix, ("batch", None, None))
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssd":
-        return x, aux
+        return (x, aux, stats) if return_stats else (x, aux)
     h2 = common.rms_norm(x, params["norm2"])
     if kind in ("moe", "mla_moe"):
         y, aux = moe.apply(params["ffn"], h2, cfg.moe, cfg.activation)
     else:
         y = mlp.apply(params["ffn"], h2, cfg.activation)
-    return constrain(x + y, ("batch", None, None)), aux
+    x = constrain(x + y, ("batch", None, None))
+    return (x, aux, stats) if return_stats else (x, aux)
 
 
 def _sublayer_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
@@ -276,24 +335,31 @@ def _embed_inputs(params, batch: dict, cfg: ArchConfig):
     return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
 
 
-def _run_segments(params, x, cfg: ArchConfig, *, positions, stem_cfg, remat: bool):
+def _run_segments(params, x, cfg: ArchConfig, *, positions, stem_cfg,
+                  remat: bool, policies=None):
+    eff = _layer_policies(cfg, stem_cfg, policies)
     aux_total = jnp.zeros((), jnp.float32)
+    off = 0
     for si, (n, kinds) in enumerate(layer_program(cfg)):
         seg = params[f"segment{si}"]
+        for start, length, pol in _policy_runs(eff[off:off + n]):
 
-        def body(carry, layer_params, kinds=kinds):
-            x, aux = carry
-            x, a = _group_full(layer_params, x, cfg, kinds,
-                               positions=positions, stem_cfg=stem_cfg)
-            return (x, aux + a), None
+            def body(carry, layer_params, kinds=kinds, pol=pol):
+                x, aux = carry
+                x, a = _group_full(layer_params, x, cfg, kinds,
+                                   positions=positions, stem_cfg=pol)
+                return (x, aux + a), None
 
-        if remat:
-            body = jax.checkpoint(body, prevent_cse=False)
-        if n == 1:
-            (x, aux_total), _ = body((x, aux_total),
-                                     jax.tree.map(lambda t: t[0], seg))
-        else:
-            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg)
+            if remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            if length == 1:
+                (x, aux_total), _ = body(
+                    (x, aux_total), jax.tree.map(lambda t, s=start: t[s], seg))
+            else:
+                sub = seg if length == n else jax.tree.map(
+                    lambda t, s=start, m=length: t[s:s + m], seg)
+                (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), sub)
+        off += n
     return x, aux_total
 
 
@@ -306,12 +372,15 @@ def _logits(params, x, cfg: ArchConfig):
 
 
 def loss_fn(params, batch: dict, cfg: ArchConfig, *,
-            stem_cfg: Optional[StemConfig] = None, remat: bool = True):
-    """Next-token CE (+ MoE aux, + MTP).  batch: tokens (b,s), labels (b,s)."""
+            stem_cfg=None, remat: bool = True, policies=None):
+    """Next-token CE (+ MoE aux, + MTP).  batch: tokens (b,s), labels (b,s).
+
+    ``stem_cfg`` accepts any policy spelling; ``policies`` optionally
+    overrides it per layer group ({index: policy})."""
     x = _embed_inputs(params, batch, cfg)
     positions = jnp.arange(x.shape[1])
     x, aux = _run_segments(params, x, cfg, positions=positions,
-                           stem_cfg=stem_cfg, remat=remat)
+                           stem_cfg=stem_cfg, remat=remat, policies=policies)
     txt_len = batch["tokens"].shape[1]
     x_txt = x[:, -txt_len:]
     logits = _logits(params, x_txt, cfg)
@@ -363,6 +432,44 @@ def forward_hiddens(params, batch: dict, cfg: ArchConfig, *,
     return logits, hiddens
 
 
+def forward_with_stats(params, batch: dict, cfg: ArchConfig, *,
+                       stem_cfg=None, policies=None):
+    """Diagnostic forward pass with per-sub-layer sparse-attention stats.
+
+    Runs the layer program unrolled (no scan / remat — small models only)
+    so every attention sub-layer can report the realized ``StemStats`` of
+    its *own* effective policy; this is how per-layer policy overrides are
+    observed (realized density per layer).
+
+    Returns (logits (b, s, vocab), records) where each record is a dict
+    ``{"layer": global group index, "kind": sub-layer kind, "policy":
+    policy name or None, "stats": StemStats | None}`` (stats is None for
+    sub-layers where the sparse path did not run).
+    """
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    eff = _layer_policies(cfg, stem_cfg, policies)
+    records = []
+    li = 0
+    for si, (n, kinds) in enumerate(layer_program(cfg)):
+        seg = params[f"segment{si}"]
+        for j in range(n):
+            layer_params = jax.tree.map(lambda t, j=j: t[j], seg)
+            pol = eff[li]
+            for i, kind in enumerate(kinds):
+                x, _, st = _sublayer_full(
+                    layer_params[f"sub{i}"], x, cfg, kind, positions=positions,
+                    stem_cfg=pol, return_stats=True)
+                records.append({
+                    "layer": li, "kind": kind,
+                    "policy": (pol.name or None) if pol is not None else None,
+                    "stats": st,
+                })
+            li += 1
+    logits = _logits(params, x, cfg)
+    return logits, records
+
+
 # ---------------------------------------------------------------------------
 # Serving: prefill + decode over stacked caches
 # ---------------------------------------------------------------------------
@@ -378,12 +485,14 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int):
 
 
 def prefill(params, batch: dict, cfg: ArchConfig, *, max_len: int,
-            stem_cfg: Optional[StemConfig] = None,
-            last_pos: Optional[jnp.ndarray] = None):
+            stem_cfg=None, last_pos: Optional[jnp.ndarray] = None,
+            policies=None):
     """Process the full prompt.  Returns (last-position logits, caches).
 
-    Stem (the paper's contribution) runs here — this is the pre-filling
-    phase whose latency the paper optimizes.
+    The sparsity policy (the paper's contribution) runs here — this is the
+    pre-filling phase whose latency the paper optimizes.  ``stem_cfg``
+    accepts any policy spelling; ``policies`` optionally overrides it per
+    layer group ({index: policy}).
 
     ``last_pos`` (scalar or (b,) int32) selects which position's logits to
     return per row — required for right-padded ragged prompts where row i's
@@ -392,25 +501,34 @@ def prefill(params, batch: dict, cfg: ArchConfig, *, max_len: int,
     """
     x = _embed_inputs(params, batch, cfg)
     positions = jnp.arange(x.shape[1])
+    eff = _layer_policies(cfg, stem_cfg, policies)
     caches = []
+    off = 0
     for si, (n, kinds) in enumerate(layer_program(cfg)):
         seg = params[f"segment{si}"]
+        run_caches = []
+        for start, length, pol in _policy_runs(eff[off:off + n]):
 
-        def body(x, layer_params, kinds=kinds):
-            aux = jnp.zeros((), jnp.float32)
-            cache = {}
-            for i, k in enumerate(kinds):
-                x, _, c = _sublayer_prefill(
-                    layer_params[f"sub{i}"], x, cfg, k, positions=positions,
-                    stem_cfg=stem_cfg, max_len=max_len)
-                cache[f"sub{i}"] = c
-            return x, cache
+            def body(x, layer_params, kinds=kinds, pol=pol):
+                cache = {}
+                for i, k in enumerate(kinds):
+                    x, _, c = _sublayer_prefill(
+                        layer_params[f"sub{i}"], x, cfg, k, positions=positions,
+                        stem_cfg=pol, max_len=max_len)
+                    cache[f"sub{i}"] = c
+                return x, cache
 
-        if n == 1:
-            x, cache = body(x, jax.tree.map(lambda t: t[0], seg))
-            cache = jax.tree.map(lambda t: t[None], cache)
-        else:
-            x, cache = jax.lax.scan(body, x, seg)
+            if length == 1:
+                x, cache = body(x, jax.tree.map(lambda t, s=start: t[s], seg))
+                cache = jax.tree.map(lambda t: t[None], cache)
+            else:
+                sub = seg if length == n else jax.tree.map(
+                    lambda t, s=start, m=length: t[s:s + m], seg)
+                x, cache = jax.lax.scan(body, x, sub)
+            run_caches.append(cache)
+        off += n
+        cache = run_caches[0] if len(run_caches) == 1 else jax.tree.map(
+            lambda *ts: jnp.concatenate(ts, axis=0), *run_caches)
         caches.append(cache)
     if last_pos is None:
         x_last = x[:, -1:]
@@ -439,12 +557,14 @@ def assert_paged_servable(cfg: ArchConfig) -> None:
                     f"(arch {cfg.name})")
 
 
-def init_page_pools(cfg: ArchConfig, num_pages: int, stem_cfg: StemConfig):
+def init_page_pools(cfg: ArchConfig, num_pages: int, stem_cfg):
     """Per-layer page pools, stacked along the scan axis like init_caches.
     Every attention layer gets its own (hk, P, page, d) pool; the page
-    table (slot -> pages) is shared across layers and lives in the engine."""
+    table (slot -> pages) is shared across layers and lives in the engine.
+    ``stem_cfg`` accepts any policy spelling (page = policy block)."""
     from repro.runtime import paged as paged_lib
 
+    stem_cfg = policy_lib.as_policy(stem_cfg)
     assert_paged_servable(cfg)
     pools = []
     for n, kinds in layer_program(cfg):
@@ -459,7 +579,7 @@ def init_page_pools(cfg: ArchConfig, num_pages: int, stem_cfg: StemConfig):
 
 def prefill_kv_pages(params, tokens: jnp.ndarray, true_len: jnp.ndarray,
                      pools, page_row: jnp.ndarray, cfg: ArchConfig,
-                     stem_cfg: StemConfig):
+                     stem_cfg):
     """Prefill ONE request and write its pages + summaries into the pools.
 
     tokens: (1, Lp) right-padded to a page multiple; true_len: scalar int32;
@@ -473,6 +593,7 @@ def prefill_kv_pages(params, tokens: jnp.ndarray, true_len: jnp.ndarray,
     """
     from repro.runtime import paged as paged_lib
 
+    stem_cfg = policy_lib.as_policy(stem_cfg)
     logits, caches = prefill(params, {"tokens": tokens}, cfg,
                              max_len=tokens.shape[1], stem_cfg=stem_cfg,
                              last_pos=true_len - 1)
@@ -494,7 +615,7 @@ def prefill_kv_pages(params, tokens: jnp.ndarray, true_len: jnp.ndarray,
 
 def paged_decode_step(params, tokens: jnp.ndarray, pools,
                       page_table: jnp.ndarray, cache_lens: jnp.ndarray,
-                      cfg: ArchConfig, *, stem_cfg: StemConfig,
+                      cfg: ArchConfig, *, stem_cfg,
                       budget_frac: float = 1.0):
     """One token for every engine slot against the paged Stem KV cache.
 

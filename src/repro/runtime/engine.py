@@ -40,7 +40,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.config import StemConfig
 from repro.launch import steps as steps_lib
 from repro.models import transformer
 from repro.runtime import paged as paged_lib
@@ -112,21 +111,29 @@ class _SlotState:
 
 
 class StemEngine:
-    """Continuous-batching engine; host-side scheduler + jitted steps."""
+    """Continuous-batching engine; host-side scheduler + jitted steps.
 
-    def __init__(self, bundle, params, stem_cfg: StemConfig,
+    ``stem_cfg`` names the engine's sparsity policy: a ``SparsityPolicy``,
+    a registered policy name (``"stem"``, ``"streaming"``, …) or a legacy
+    ``StemConfig``.  One policy drives prefill page summaries and decode
+    page selection alike."""
+
+    def __init__(self, bundle, params, stem_cfg,
                  ecfg: EngineConfig = EngineConfig()):
+        from repro.core import policy as policy_lib
+
         transformer.assert_paged_servable(bundle.cfg)
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
-        self.stem_cfg = stem_cfg
+        self.policy = policy_lib.as_policy(stem_cfg)
+        self.stem_cfg = self.policy          # legacy attribute name
         self.ecfg = ecfg
-        self.page_size = stem_cfg.block_size
+        self.page_size = self.policy.block_size
 
         S, P = ecfg.max_slots, ecfg.max_pages_per_slot
         self.pools = transformer.init_page_pools(
-            bundle.cfg, ecfg.num_pages, stem_cfg)
+            bundle.cfg, ecfg.num_pages, self.policy)
         self.allocator = paged_lib.PageAllocator(ecfg.num_pages)
         self.page_table = np.zeros((S, P), np.int32)
         self.cache_lens = np.zeros((S,), np.int32)
@@ -140,12 +147,12 @@ class StemEngine:
         self._slot_ever_used = [False] * S
 
         self._decode = jax.jit(steps_lib.make_batched_decode(
-            bundle, stem_cfg=stem_cfg, budget_frac=ecfg.budget_frac),
+            bundle, stem_cfg=self.policy, budget_frac=ecfg.budget_frac),
             donate_argnums=(2,))
         # jit retraces per token shape: one trace per padded prompt-length
         # bucket, cached inside the one jitted callable.
         self._prefill = jax.jit(steps_lib.make_insert_prefill(
-            bundle, stem_cfg=stem_cfg), donate_argnums=(3,))
+            bundle, stem_cfg=self.policy), donate_argnums=(3,))
 
     # -- scheduling ---------------------------------------------------------
 

@@ -33,9 +33,16 @@ import jax.numpy as jnp
 
 from repro.core import decode as decode_lib
 from repro.core import metric as metric_lib
-from repro.core.config import StemConfig
+from repro.core import policy as policy_lib
+from repro.core.config import StemConfig  # noqa: F401  (legacy annotation)
 
 TRASH_PAGE = 0
+
+# ``cfg`` arguments below accept a legacy StemConfig, a SparsityPolicy or a
+# registered policy name; the write paths only need ``block_size``/``stride``
+# (duck-typed on both spellings), and the decode path routes metric +
+# selection through the policy objects — the exact same ones the prefill
+# and fixed-batch decode paths consume.
 
 
 class PagePool(NamedTuple):
@@ -76,7 +83,7 @@ def reset_pages(pool: PagePool, page_ids: jnp.ndarray) -> PagePool:
 
 def write_prefill_pages(pool: PagePool, page_ids: jnp.ndarray,
                         k: jnp.ndarray, v: jnp.ndarray, true_len: jnp.ndarray,
-                        cfg: StemConfig) -> PagePool:
+                        cfg) -> PagePool:
     """Scatter one prefilled sequence's K/V + summaries into the pool.
 
     k, v: (hk, L, d) with L = len(page_ids) * page_size (right-padded
@@ -84,6 +91,7 @@ def write_prefill_pages(pool: PagePool, page_ids: jnp.ndarray,
     contents and summaries match the zero-padded-cache semantics that
     ``append_token`` extends incrementally.
     """
+    cfg = policy_lib.as_policy(cfg)
     hk, L, d = k.shape
     bs = cfg.block_size
     npages = L // bs
@@ -104,7 +112,7 @@ def write_prefill_pages(pool: PagePool, page_ids: jnp.ndarray,
 
 def append_token(pool: PagePool, page_table: jnp.ndarray,
                  cache_lens: jnp.ndarray, k_new: jnp.ndarray,
-                 v_new: jnp.ndarray, cfg: StemConfig) -> PagePool:
+                 v_new: jnp.ndarray, cfg) -> PagePool:
     """Write one new token per slot into its current page + fold summaries.
 
     The increments reproduce ``write_prefill_pages`` of the grown sequence
@@ -119,6 +127,7 @@ def append_token(pool: PagePool, page_table: jnp.ndarray,
     k_new, v_new: (slots, hk, 1, d).  Slots whose page table points at the
     trash page (inactive) scribble page 0 harmlessly.
     """
+    cfg = policy_lib.as_policy(cfg)
     b = k_new.shape[0]
     bs, stride = cfg.block_size, cfg.stride
     per_group = bs // stride
@@ -145,17 +154,20 @@ def paged_sparse_decode(
     pool: PagePool,
     page_table: jnp.ndarray,    # (slots, max_pages) global page ids
     cache_lens: jnp.ndarray,    # (slots,) valid tokens per slot
-    cfg: StemConfig,
+    cfg,
     budget_frac: float = 0.25,
 ) -> jnp.ndarray:
-    """Stem-sparse decode attention straight off the page pool.
+    """Policy-sparse decode attention straight off the page pool.
 
     Identical math to ``core.decode.sparse_decode_attention`` over the
     logical (page-table-ordered) cache: summaries are gathered per slot via
-    the page table, OAM + the TPD-style budget select *logical* page slots
-    per row, and only the selected pages are fetched from the pool.  At
-    ``budget_frac=1.0`` this equals dense decode over each slot's prefix.
+    the page table, the policy's metric + budget rule select *logical* page
+    slots per row, and only the selected pages are fetched from the pool.
+    At ``budget_frac=1.0`` (top-k selector) this equals dense decode over
+    each slot's prefix.  A metric registered once in ``core/policy.py``
+    therefore serves the engine with no paged-specific code.
     """
+    cfg = policy_lib.as_policy(cfg)
     b, hq, _, d = q.shape
     hk = pool.k.shape[0]
     group = hq // hk
