@@ -12,8 +12,10 @@ accuracy benchmarks).  Mapping to the paper:
   roofline.py             EXPERIMENTS.md roofline collation (from dry-run)
   ragged_exec.py          padded vs ragged/deduped executor A/B (DESIGN.md;
                           also writes BENCH_ragged.json standalone)
-  serving.py              continuous-batching engine A/B, stem-on vs
-                          stem-off (writes BENCH_serving.json standalone)
+  serving.py              continuous-batching engine A/Bs: stem-on vs
+                          stem-off (BENCH_serving.json) and chunked vs
+                          monolithic prefill under a mixed workload
+                          (``--chunked``, BENCH_chunked.json)
   policy_parity.py        named SparsityPolicy stack (stem / uniform-sam /
                           streaming) through the shared executor (writes
                           BENCH_policy.json standalone)

@@ -1,16 +1,29 @@
-"""Serving A/B: continuous-batching engine throughput, stem-on vs stem-off.
+"""Serving A/B benchmarks over the continuous-batching engine.
 
-Drives the engine (``runtime/engine.py``) with a mixed-length,
-staggered-arrival trace at batch (max_slots) {4, 16} and measures
-end-to-end tokens/sec plus p50/p95 per-token decode latency for the
-Stem-sparse arm (``budget_frac < 1``) against the dense-equivalent arm
-(``budget_frac = 1.0``) on the *same* paged cache and trace — the
-comparison isolates what OAM page selection buys at serving time.
+Two studies, both on the paged Stem KV cache (``runtime/engine.py``):
 
-Writes ``BENCH_serving.json`` so CI keeps a serving-perf trajectory across
-PRs (next to ``BENCH_ragged.json``).
+  1. **stem-on vs stem-off** (``BENCH_serving.json``) — mixed-length,
+     staggered-arrival trace at batch (max_slots) {4, 16}; end-to-end
+     tokens/sec plus the serving-latency triple measured *separately*:
+     TTFT (admission -> first token), TPOT (mean per-output-token time
+     after the first), and inter-token p50/p95 (gaps as experienced by a
+     request — these surface head-of-line stalls, unlike the old
+     batched-step wall time).  The comparison isolates what OAM page
+     selection buys at serving time.
 
-Standalone: ``PYTHONPATH=src python benchmarks/serving.py [--quick]``.
+  2. **chunked vs monolithic prefill** (``--chunked``,
+     ``BENCH_chunked.json``) — a mixed workload where long prompts arrive
+     *mid-decode*: short requests stream tokens while long prompts land.
+     The monolithic arm prefills each long prompt in one admission pass
+     (stalling every in-flight decode and retracing per prompt length);
+     the chunked arm advances ``chunk_size`` tokens per unified step under
+     the engine's token budget.  Reported per arm: decode-victim
+     inter-token p95 (the HOL-blocking signature), long-prompt TTFT, and
+     trace counts.  The chunked arm should show strictly lower p95 with
+     TTFT within 2x.
+
+Standalone: ``PYTHONPATH=src python benchmarks/serving.py [--quick]
+[--chunked]``.  Both reports feed CI's perf-trajectory artifacts.
 """
 from __future__ import annotations
 
@@ -59,9 +72,9 @@ def run_arm(bundle, params, stem_cfg: StemConfig, *, max_slots: int,
         np.random.RandomState(seed), 2 * max_slots, min_prompt, max_prompt,
         decode_tokens, bundle.cfg.vocab_size, arrival_every=1)
 
-    # Warmup pass with an identical trace: compiles the decode step and
-    # every prefill prompt-length bucket, so the timed pass below measures
-    # steady-state serving, not XLA compilation.
+    # Warmup pass with an identical trace: compiles the unified step, so
+    # the timed pass below measures steady-state serving, not XLA
+    # compilation.
     engine.run(mk_trace())
     engine.reset_metrics()
 
@@ -79,9 +92,9 @@ def run_arm(bundle, params, stem_cfg: StemConfig, *, max_slots: int,
         "total_tokens": total_tokens,
         "wall_s": wall,
         "throughput_tok_s": total_tokens / max(wall, 1e-9),
-        "ttft_ms_mean": float(np.mean([f.ttft_s for f in finished]) * 1e3),
         "max_concurrency": engine.stats["max_concurrency"],
         "slots_reused": engine.stats["slots_reused"],
+        "traces": engine.stats["traces"],
         **_latency_stats(finished),
     }
 
@@ -105,9 +118,10 @@ def run_bench(quick: bool) -> dict:
                            max_prompt=max_prompt, decode_tokens=decode_tokens)
             arm = "dense" if budget_frac == 1.0 else "stem"
             print(f"slots={max_slots:>2} {arm:>5}: "
-                  f"{cell['throughput_tok_s']:8.1f} tok/s, per-token "
+                  f"{cell['throughput_tok_s']:8.1f} tok/s, inter-token "
                   f"p50 {cell['p50_ms']:.2f} / p95 {cell['p95_ms']:.2f} ms, "
-                  f"TTFT {cell['ttft_ms_mean']:.1f} ms", flush=True)
+                  f"TTFT {cell['ttft_ms_mean']:.1f} ms, "
+                  f"TPOT {cell['tpot_ms_mean']:.2f} ms", flush=True)
             cells.append(cell)
     return {
         "benchmark": "serving",
@@ -122,17 +136,161 @@ def run_bench(quick: bool) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Chunked vs monolithic prefill under a mixed workload (BENCH_chunked.json)
+# ---------------------------------------------------------------------------
+
+def build_mixed_workload(rng, *, n_short: int, short_prompt: tuple,
+                         short_decode: int, n_long: int, long_prompt: int,
+                         long_decode: int, long_arrival0: int,
+                         long_every: int, vocab: int):
+    """Short requests decoding steadily from step 0; long prompts landing
+    mid-decode — the head-of-line-blocking scenario chunked prefill fixes."""
+    from repro.runtime.engine import Request
+
+    reqs = []
+    for i in range(n_short):
+        plen = int(rng.randint(short_prompt[0], short_prompt[1] + 1))
+        reqs.append(Request(
+            uid=i, prompt=rng.randint(0, vocab, size=(plen,)).astype(np.int32),
+            max_new_tokens=short_decode, arrival_step=0))
+    for j in range(n_long):
+        reqs.append(Request(
+            uid=n_short + j,
+            prompt=rng.randint(0, vocab, size=(long_prompt,)).astype(np.int32),
+            max_new_tokens=long_decode,
+            arrival_step=long_arrival0 + j * long_every))
+    return reqs
+
+
+def run_chunked_arm(bundle, params, stem_cfg, *, monolithic: bool,
+                    chunk_size: int, max_slots: int, workload_kw: dict,
+                    seed: int = 0) -> dict:
+    from repro.runtime.engine import EngineConfig, StemEngine
+
+    long_prompt = workload_kw["long_prompt"]
+    decode_max = max(workload_kw["short_decode"], workload_kw["long_decode"])
+    ecfg = EngineConfig.for_trace(
+        max_slots=max_slots, max_prompt=long_prompt,
+        max_new_tokens=decode_max, page_size=stem_cfg.block_size,
+        budget_frac=STEM_BUDGET, chunk_size=chunk_size,
+        monolithic_prefill=monolithic)
+    engine = StemEngine(bundle, params, stem_cfg, ecfg)
+    vocab = bundle.cfg.vocab_size
+    mk = lambda: build_mixed_workload(np.random.RandomState(seed),
+                                      vocab=vocab, **workload_kw)
+
+    engine.run(mk())            # warmup: compile every trace this arm needs
+    engine.reset_metrics()
+    trace = mk()
+    for r in trace:
+        r.arrival_step += engine.step_count
+    t0 = time.perf_counter()
+    finished = engine.run(trace)
+    wall = time.perf_counter() - t0
+
+    n_short = workload_kw["n_short"]
+    short = [f for f in finished if f.uid < n_short]
+    long_ = [f for f in finished if f.uid >= n_short]
+    victim_lats = np.asarray([t for f in short for t in f.token_latencies_s])
+    total_tokens = sum(len(f.tokens) for f in finished)
+    return {
+        "arm": "monolithic" if monolithic else "chunked",
+        "chunk_size": None if monolithic else engine.chunk_size,
+        "requests": len(finished),
+        "total_tokens": total_tokens,
+        "wall_s": wall,
+        "throughput_tok_s": total_tokens / max(wall, 1e-9),
+        "decode_p50_ms": float(np.percentile(victim_lats, 50) * 1e3),
+        "decode_p95_ms": float(np.percentile(victim_lats, 95) * 1e3),
+        "decode_max_ms": float(victim_lats.max() * 1e3),
+        "long_ttft_ms_mean": float(np.mean([f.ttft_s for f in long_]) * 1e3),
+        "long_ttft_ms_p95": float(np.percentile(
+            [f.ttft_s for f in long_], 95) * 1e3),
+        "tpot_ms_mean": float(np.nanmean([f.tpot_s for f in finished]) * 1e3),
+        "traces": engine.stats["traces"],
+        "prefill_traces": engine.stats["prefill_traces"],
+        "chunks": engine.stats["chunks"],
+    }
+
+
+def run_chunked_bench(quick: bool) -> dict:
+    import jax
+    from repro.models import registry
+
+    cfg = QUICK_ARCH if quick else FULL_ARCH
+    stem_cfg = _stem_cfg(quick)
+    bundle = registry.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    bs = stem_cfg.block_size
+    max_slots = 4
+    # Sized so the head-of-line stalls register in the p95: each long
+    # arrival lands amid short decode streams whose total gap count keeps
+    # the stall steps above the 95th percentile.
+    workload_kw = dict(
+        n_short=3,
+        short_prompt=(bs, 3 * bs),
+        short_decode=16 if quick else 24,
+        n_long=4,
+        long_prompt=24 * bs,
+        long_decode=4,
+        long_arrival0=3,
+        long_every=5,
+    )
+    chunk_size = 12 * bs
+
+    cells = []
+    for monolithic in (False, True):
+        cell = run_chunked_arm(bundle, params, stem_cfg,
+                               monolithic=monolithic, chunk_size=chunk_size,
+                               max_slots=max_slots, workload_kw=workload_kw)
+        print(f"{cell['arm']:>10}: decode p50 {cell['decode_p50_ms']:.2f} / "
+              f"p95 {cell['decode_p95_ms']:.2f} / max "
+              f"{cell['decode_max_ms']:.2f} ms; long TTFT "
+              f"{cell['long_ttft_ms_mean']:.1f} ms; "
+              f"{cell['throughput_tok_s']:.1f} tok/s; traces "
+              f"{cell['traces']}+{cell['prefill_traces']} prefill",
+              flush=True)
+        cells.append(cell)
+    chunked, mono = cells
+    return {
+        "benchmark": "serving_chunked",
+        "mode": "quick" if quick else "full",
+        "backend": jax.default_backend(),
+        "arch": cfg.name,
+        "block_size": bs,
+        "chunk_size": chunk_size,
+        "budget_frac": STEM_BUDGET,
+        "workload": {k: (list(v) if isinstance(v, tuple) else v)
+                     for k, v in workload_kw.items()},
+        "cells": cells,
+        "p95_speedup_vs_monolithic":
+            mono["decode_p95_ms"] / max(chunked["decode_p95_ms"], 1e-9),
+        "ttft_ratio_vs_monolithic":
+            chunked["long_ttft_ms_mean"] / max(mono["long_ttft_ms_mean"], 1e-9),
+    }
+
+
 def run(quick: bool = True):
-    """benchmarks/run.py entry point: CSV rows per (slots, arm) cell."""
-    report = run_bench(quick)
+    """benchmarks/run.py entry point: CSV rows per cell (both studies)."""
     rows = []
+    report = run_bench(quick)
     for c in report["cells"]:
         arm = "dense" if c["budget_frac"] == 1.0 else "stem"
         rows.append((
             f"serving/slots{c['max_slots']}/{arm}",
             c["p50_ms"] * 1e3,
             f"tok_s={c['throughput_tok_s']:.1f};p95_ms={c['p95_ms']:.2f};"
-            f"ttft_ms={c['ttft_ms_mean']:.1f}",
+            f"ttft_ms={c['ttft_ms_mean']:.1f};tpot_ms={c['tpot_ms_mean']:.2f}",
+        ))
+    chunked = run_chunked_bench(quick)
+    for c in chunked["cells"]:
+        rows.append((
+            f"serving/chunked/{c['arm']}",
+            c["decode_p50_ms"] * 1e3,
+            f"p95_ms={c['decode_p95_ms']:.2f};"
+            f"ttft_ms={c['long_ttft_ms_mean']:.1f};"
+            f"traces={c['traces']}+{c['prefill_traces']}",
         ))
     return rows
 
@@ -141,11 +299,19 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: 2-layer model, short prompts")
-    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--chunked", action="store_true",
+                    help="run the chunked-vs-monolithic mixed workload "
+                         "instead of the stem-on/off study")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    report = run_bench(args.quick)
-    with open(args.out, "w") as f:
+    if args.chunked:
+        report = run_chunked_bench(args.quick)
+        out = args.out or "BENCH_chunked.json"
+    else:
+        report = run_bench(args.quick)
+        out = args.out or "BENCH_serving.json"
+    with open(out, "w") as f:
         json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))
 

@@ -5,6 +5,11 @@ declared via the policy registry (``--policy``); the dense arm runs the
 same paged decode at ``budget_frac=1.0`` (the dense-equivalent oracle), so
 the comparisons isolate each policy's selection rule.
 
+Prefill is **chunked** by default: long prompts advance ``--chunk-size``
+tokens per engine step inside the single unified trace instead of stalling
+co-tenants behind a monolithic pass (``--monolithic`` shows the legacy
+behaviour and its per-length retraces).
+
   PYTHONPATH=src python examples/serve_stem.py
 """
 from repro.launch import serve as serve_mod
@@ -13,22 +18,28 @@ COMMON = [
     "--arch", "qwen3-0.6b", "--reduced",
     "--requests", "6", "--min-prompt", "64", "--max-prompt", "320",
     "--decode-tokens", "16", "--max-slots", "3", "--arrival-every", "2",
-    "--block-size", "32",
+    "--block-size", "32", "--chunk-size", "128",
 ]
 
 
 def main():
-    print("== dense-equivalent decode (budget_frac=1.0) ==")
+    print("== dense-equivalent decode (budget_frac=1.0, chunked prefill) ==")
     dense = serve_mod.main(COMMON)
     print("\n== Stem-sparse decode (--policy stem, budget_frac=0.5) ==")
     stem = serve_mod.main(COMMON + ["--policy", "stem", "--budget-frac", "0.5"])
     print("\n== StreamingLLM decode (--policy streaming: sink+local pages) ==")
     streaming = serve_mod.main(COMMON + ["--policy", "streaming"])
+    print("\n== monolithic-prefill baseline (per-length traces, HOL stalls) ==")
+    mono = serve_mod.main(COMMON + ["--policy", "stem", "--monolithic"])
     print(f"\nthroughput dense {dense['throughput_tok_s']:.1f} tok/s vs stem "
           f"{stem['throughput_tok_s']:.1f} tok/s vs streaming "
-          f"{streaming['throughput_tok_s']:.1f} tok/s; per-token p50 "
+          f"{streaming['throughput_tok_s']:.1f} tok/s; inter-token p50 "
           f"{dense['p50_ms']:.2f} -> {stem['p50_ms']:.2f} -> "
-          f"{streaming['p50_ms']:.2f} ms "
+          f"{streaming['p50_ms']:.2f} ms; chunked vs monolithic p95 "
+          f"{stem['p95_ms']:.2f} vs {mono['p95_ms']:.2f} ms, traces "
+          f"{stem['engine_stats']['traces']} vs "
+          f"{mono['engine_stats']['traces']}"
+          f"+{mono['engine_stats']['prefill_traces']} "
           f"(CPU proxy; roofline analysis covers the TPU story)")
 
 

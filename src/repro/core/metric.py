@@ -198,6 +198,44 @@ def oam_metric(
     )
 
 
+def chunk_routing_scores(
+    q: jnp.ndarray,
+    k_groups: jnp.ndarray,
+    *,
+    block_size: int,
+    pooling: str = "antidiag",
+) -> jnp.ndarray:
+    """Routing scores of a *chunk* of queries against pooled key summaries.
+
+    The chunked-prefill analogue of :func:`blockwise_routing_scores`: the
+    query side is pooled live from the chunk (block-aligned, so the group
+    means equal the one-shot pooling of those rows), while the key side
+    comes pre-pooled from the paged cache summaries (``PagePool.kg``) — the
+    exact same anti-diagonal group means ``antidiag_pool`` produces, so the
+    resulting scores match one-shot prefill bit-for-bit on full key blocks.
+
+    Args:
+      q: (b, hq, C, d) chunk queries with C % block_size == 0.
+      k_groups: (b, hk, n, stride, d) pooled key-block group means.
+
+    Returns:
+      (b, hq, nc, n) approximate mean logits (nc = C // block_size).
+    """
+    b, hq, c, d = q.shape
+    hk = k_groups.shape[1]
+    if hq % hk != 0:
+        raise ValueError(f"q_heads {hq} not a multiple of kv_heads {hk}")
+    group = hq // hk
+    stride = k_groups.shape[-2]
+    qp = antidiag_pool(q, block_size, stride)          # (b, hq, nc, s, d)
+    kp = jnp.repeat(k_groups, group, axis=1)           # (b, hq, n, s, d)
+    if pooling == "antidiag":
+        return antidiag_routing_scores(qp, kp, d)
+    # Plain mean pooling: the block mean is the mean of the (equal-sized)
+    # anti-diagonal group means, so both sides reduce over the group axis.
+    return mean_routing_scores(qp.mean(axis=-2), kp.mean(axis=-2), d)
+
+
 def decode_routing_scores(q: jnp.ndarray, k_groups: jnp.ndarray) -> jnp.ndarray:
     """Block routing scores for a single decode query per sequence.
 

@@ -78,6 +78,16 @@ class BlockMetric(Protocol):
         """
         ...
 
+    def chunk_scores(self, q, k_groups, v_mag, *, block_size: int) -> jnp.ndarray:
+        """A chunk of queries vs pooled cache-block summaries (chunked
+        prefill, ``core/chunked.py``).  Must reproduce ``prefill_scores`` on
+        full key blocks so chunked selection matches one-shot prefill.
+
+        q: (b, hq, C, d) with C % block_size == 0; k_groups / v_mag as in
+        ``decode_scores``.  Returns (b, hq, nc, n).
+        """
+        ...
+
 
 @runtime_checkable
 class BudgetSchedule(Protocol):
@@ -137,6 +147,16 @@ class OutputAwareMetric:
             return route
         return route + self.beta * jnp.maximum(v_mag, 0.0)[:, :, None, :]
 
+    def chunk_scores(self, q, k_groups, v_mag, *, block_size: int) -> jnp.ndarray:
+        route = metric_lib.chunk_routing_scores(
+            q, k_groups, block_size=block_size, pooling=self.pooling)
+        if self.beta == 0.0:
+            return route
+        group = q.shape[1] // k_groups.shape[1]
+        mv = jnp.repeat(v_mag, group, axis=1)              # (b, hq, n)
+        return route + self.beta * jnp.maximum(mv, 0.0).astype(
+            route.dtype)[..., None, :]
+
 
 @dataclasses.dataclass(frozen=True)
 class RoutingMetric:
@@ -154,6 +174,10 @@ class RoutingMetric:
     def decode_scores(self, q, k_groups, v_mag) -> jnp.ndarray:
         return metric_lib.decode_routing_scores(q, k_groups)
 
+    def chunk_scores(self, q, k_groups, v_mag, *, block_size: int) -> jnp.ndarray:
+        return metric_lib.chunk_routing_scores(
+            q, k_groups, block_size=block_size, pooling=self.pooling)
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamingMetric:
@@ -169,6 +193,11 @@ class StreamingMetric:
         b, hq = q.shape[0], q.shape[1]
         hk, n = k_groups.shape[1], k_groups.shape[2]
         return jnp.zeros((b, hk, hq // hk, n), jnp.float32)
+
+    def chunk_scores(self, q, k_groups, v_mag, *, block_size: int) -> jnp.ndarray:
+        b, hq, c, _ = q.shape
+        n = k_groups.shape[2]
+        return jnp.zeros((b, hq, c // block_size, n), jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -552,6 +581,22 @@ class SparsityPolicy:
             m, schedule_lib.budgets_as_jax(budgets), k_max,
             with_block_mask=with_block_mask)
         return sel, k_max
+
+    # -- chunked prefill (core/chunked.py) -----------------------------------
+
+    def chunk_scores(self, q, k_groups, v_mag) -> jnp.ndarray:
+        """Chunk-of-queries metric against pooled page summaries, with the
+        policy's GQA group reduction applied — the chunked-prefill analogue
+        of ``prefill_scores``.  Returns (b, hq, nc, n)."""
+        fn = getattr(self.metric, "chunk_scores", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"metric {type(self.metric).__name__} does not implement "
+                "chunk_scores(q, k_groups, v_mag, block_size=...) — required "
+                "for chunked prefill (core/chunked.py)")
+        m = fn(q, k_groups, v_mag, block_size=self.block_size)
+        group = q.shape[1] // k_groups.shape[1]
+        return metric_lib.group_reduce_metric(m, group, self.group_reduce)
 
     # -- decode (contiguous and paged caches share these) --------------------
 

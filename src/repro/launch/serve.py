@@ -7,8 +7,13 @@ carry *mixed prompt lengths* and *staggered arrivals*; the engine
 (``runtime/engine.py``) admits them into slots as capacity frees up and
 recycles slots on completion — no uniform-batch assumption anywhere.
 
-Two modes:
-  * default — the continuous-batching engine on the paged cache;
+Three modes:
+  * default — the continuous-batching engine with **chunked prefill**: one
+    fixed-shape unified step mixes prefill chunks (``--chunk-size``) and
+    decode tokens per iteration under a ``--step-token-budget``, so long
+    prompts never stall in-flight decodes and the engine compiles once;
+  * ``--monolithic`` — the legacy one-shot admission prefill (per-length
+    traces, head-of-line blocking) kept as the A/B baseline;
   * ``--fixed-batch`` — the legacy one-shot batch, but ragged: per-request
     prompt lengths are right-padded, per-sequence ``cache_lens`` flow
     through ``make_serve_step``, and every row decodes at its own length.
@@ -51,11 +56,24 @@ def build_trace(rng: np.random.RandomState, n_requests: int, min_prompt: int,
 
 
 def _latency_stats(finished):
+    """Serving-latency summary: inter-token decode gaps (p50/p95 — these
+    surface head-of-line stalls), TTFT, and TPOT, reported separately."""
     lats = np.asarray([t for f in finished for t in f.token_latencies_s])
-    if lats.size == 0:
-        return {"p50_ms": 0.0, "p95_ms": 0.0}
-    return {"p50_ms": float(np.percentile(lats, 50) * 1e3),
-            "p95_ms": float(np.percentile(lats, 95) * 1e3)}
+    ttfts = np.asarray([f.ttft_s for f in finished])
+    # tpot_s is NaN for single-output-token requests (TPOT undefined there).
+    tpots = np.asarray([f.tpot_s for f in finished])
+    tpots = tpots[~np.isnan(tpots)] if tpots.size else tpots
+    out = {"p50_ms": 0.0, "p95_ms": 0.0, "ttft_ms_mean": 0.0,
+           "ttft_ms_p95": 0.0, "tpot_ms_mean": 0.0}
+    if lats.size:
+        out["p50_ms"] = float(np.percentile(lats, 50) * 1e3)
+        out["p95_ms"] = float(np.percentile(lats, 95) * 1e3)
+    if ttfts.size:
+        out["ttft_ms_mean"] = float(np.mean(ttfts) * 1e3)
+        out["ttft_ms_p95"] = float(np.percentile(ttfts, 95) * 1e3)
+    if tpots.size:
+        out["tpot_ms_mean"] = float(np.mean(tpots) * 1e3)
+    return out
 
 
 def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
@@ -65,7 +83,10 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
     ecfg = EngineConfig.for_trace(
         max_slots=args.max_slots, max_prompt=args.max_prompt,
         max_new_tokens=args.decode_tokens, page_size=stem_cfg.block_size,
-        budget_frac=budget_frac)
+        budget_frac=budget_frac,
+        chunk_size=args.chunk_size or None,
+        step_token_budget=args.step_token_budget or None,
+        monolithic_prefill=args.monolithic)
     engine = StemEngine(bundle, params, stem_cfg, ecfg)
     rng = np.random.RandomState(args.seed + 1)
     trace = build_trace(rng, args.requests, args.min_prompt, args.max_prompt,
@@ -75,22 +96,26 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
     wall = time.perf_counter() - t0
     stats = _latency_stats(finished)
     total_tokens = sum(len(f.tokens) for f in finished)
-    ttfts = [f.ttft_s for f in finished]
     out = {
         "mode": "engine",
+        "prefill": "monolithic" if args.monolithic else "chunked",
+        "chunk_size": engine.chunk_size,
+        "step_token_budget": engine.token_budget,
         "requests": len(finished),
         "total_tokens": total_tokens,
         "wall_s": wall,
         "throughput_tok_s": total_tokens / max(wall, 1e-9),
-        "ttft_ms_mean": float(np.mean(ttfts) * 1e3),
         "engine_stats": dict(engine.stats),
         "tokens": {f.uid: f.tokens for f in finished},
         **stats,
     }
-    print(f"engine: {len(finished)} reqs, {total_tokens} tokens in "
-          f"{wall*1e3:.0f} ms -> {out['throughput_tok_s']:.1f} tok/s; "
-          f"TTFT {out['ttft_ms_mean']:.1f} ms; per-token p50 "
+    print(f"engine ({out['prefill']}): {len(finished)} reqs, {total_tokens} "
+          f"tokens in {wall*1e3:.0f} ms -> {out['throughput_tok_s']:.1f} "
+          f"tok/s; TTFT {out['ttft_ms_mean']:.1f} ms; TPOT "
+          f"{out['tpot_ms_mean']:.2f} ms; inter-token p50 "
           f"{out['p50_ms']:.2f} / p95 {out['p95_ms']:.2f} ms; "
+          f"traces {engine.stats['traces']}"
+          f"+{engine.stats['prefill_traces']} prefill; "
           f"slots reused {engine.stats['slots_reused']}, "
           f"max concurrency {engine.stats['max_concurrency']}", flush=True)
     return out
@@ -176,6 +201,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--budget-frac", type=float, default=0.5)
     ap.add_argument("--block-size", type=int, default=0,
                     help="Stem block/page size; 0 = auto from max prompt")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="prefill chunk width in tokens (multiple of the "
+                         "page size); 0 = auto (2 pages)")
+    ap.add_argument("--step-token-budget", type=int, default=0,
+                    help="max tokens one engine step spends (decode tokens "
+                         "first, then prefill chunks); 0 = auto "
+                         "(max_slots + chunk)")
+    ap.add_argument("--monolithic", action="store_true",
+                    help="legacy one-shot admission prefill (per-length "
+                         "traces, head-of-line blocking) — the chunked A/B "
+                         "baseline")
     ap.add_argument("--fixed-batch", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

@@ -134,40 +134,54 @@ def make_serve_step(bundle: registry.ModelBundle):
 # Paged-engine steps (runtime/engine.py)
 # ---------------------------------------------------------------------------
 
-def make_insert_prefill(bundle: registry.ModelBundle, *, stem_cfg):
+def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
+                      budget_frac: float = 1.0, chunk_k_max: int = 0,
+                      on_trace=None):
+    """The engine's single step: (params, pools, tokens (S,1),
+    page_table (S,P), cache_lens (S,), chunk) ->
+    (decode logits (S, vocab), chunk logits (S, vocab) | None, pools).
+
+    One mixed batch of decode tokens + prefill chunks per call
+    (``transformer.paged_mixed_step``).  With fixed S/P/C the chunked
+    engine compiles this **exactly once** for arbitrary prompt lengths —
+    the per-length retraces of the old monolithic ``insert_prefill`` are
+    gone.  ``chunk=None`` is the decode-only view (one extra trace),
+    used by the legacy monolithic arm.  ``on_trace`` fires as a Python
+    side effect at trace time — the engine's retrace counter."""
+    cfg = bundle.cfg
+    transformer.assert_paged_servable(cfg)
+
+    def unified_step(params, pools, tokens, page_table, cache_lens,
+                     chunk=None):
+        if on_trace is not None:
+            on_trace()
+        return transformer.paged_mixed_step(
+            params, tokens, pools, page_table, cache_lens, cfg,
+            stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=chunk,
+            chunk_k_max=chunk_k_max)
+    return unified_step
+
+
+def make_monolithic_prefill(bundle: registry.ModelBundle, *, stem_cfg,
+                            on_trace=None):
     """(params, tokens (1, Lp), true_len, pools, page_row) ->
     (next-token logits (vocab,), pools).
 
-    Prefills ONE request (right-padded to a page multiple) and scatters its
-    K/V pages + Stem block summaries into the engine's page pools.
-    ``page_row`` is the request's full trash-padded reservation — every
-    page in it is reset to pristine first (recycled pages are dirty), then
-    the leading prompt pages are written.  jit one instance per
-    padded-length bucket; donate the pools."""
+    The legacy one-shot admission prefill: one request, right-padded to a
+    page multiple, scattered into the pools with its block summaries
+    (``transformer.prefill_kv_pages``).  jit retraces one instance per
+    padded-length bucket — kept as the A/B baseline for the unified
+    chunked step (``benchmarks/serving.py --chunked``) and as the
+    fallback for threshold selectors that chunked prefill cannot serve."""
     cfg = bundle.cfg
     transformer.assert_paged_servable(cfg)
 
-    def insert_prefill(params, tokens, true_len, pools, page_row):
+    def monolithic_prefill(params, tokens, true_len, pools, page_row):
+        if on_trace is not None:
+            on_trace()
         return transformer.prefill_kv_pages(params, tokens, true_len, pools,
                                             page_row, cfg, stem_cfg)
-    return insert_prefill
-
-
-def make_batched_decode(bundle: registry.ModelBundle, *, stem_cfg,
-                        budget_frac: float = 1.0):
-    """(params, tokens (S,1), pools, page_table (S,P), cache_lens (S,)) ->
-    (logits (S, vocab), pools).
-
-    One ragged decode step for every engine slot against the paged Stem KV
-    cache; ``budget_frac=1.0`` is the dense-equivalent arm."""
-    cfg = bundle.cfg
-    transformer.assert_paged_servable(cfg)
-
-    def batched_decode(params, tokens, pools, page_table, cache_lens):
-        return transformer.paged_decode_step(
-            params, tokens, pools, page_table, cache_lens, cfg,
-            stem_cfg=stem_cfg, budget_frac=budget_frac)
-    return batched_decode
+    return monolithic_prefill
 
 
 # ---------------------------------------------------------------------------

@@ -230,6 +230,45 @@ def apply_decode_paged(
     return out, pool
 
 
+def apply_chunk_paged(
+    params,
+    x: jnp.ndarray,                  # (slots, C, d) — one prefill chunk per slot
+    cfg: ArchConfig,
+    pool,                            # runtime.paged.PagePool for this layer
+    page_table: jnp.ndarray,         # (slots, max_pages) global page ids
+    chunk_start: jnp.ndarray,        # (slots,) absolute chunk start positions
+    true_len: jnp.ndarray,           # (slots,) true prompt lengths
+    budgets: jnp.ndarray,            # (slots, C // block) absolute-row budgets
+    stem_cfg,                        # any policy spelling (see apply_full)
+    *,
+    k_max: int = 0,                  # static gather width (0 = max_pages)
+    use_rope: bool = True,
+):
+    """One chunked-prefill step against the paged Stem KV cache.
+
+    Writes the chunk's K/V pages + summaries first (``write_chunk_pages``),
+    then runs the policy's chunked selection + exact attention over history
+    *and* in-chunk pages uniformly (``core.chunked``), with rope, TPD
+    budgets and sink/local floors all at absolute positions — so any chunk
+    size is selection-equivalent to one-shot prefill.  Slots without a
+    chunk this step carry an all-zero page table row (writes land in the
+    trash page; outputs are ignored).  Returns (out, new_pool)."""
+    from repro.core import chunked as chunked_lib
+    from repro.runtime import paged as paged_lib
+
+    stem_cfg = policy_lib.as_policy(stem_cfg)
+    c = x.shape[1]
+    positions = chunk_start[:, None] + jnp.arange(c)[None, :]     # (slots, C)
+    q, k_new, v_new = _project(params, x, cfg, positions, use_rope=use_rope)
+    pool = paged_lib.write_chunk_pages(pool, page_table, chunk_start, k_new,
+                                       v_new, true_len, stem_cfg)
+    o = chunked_lib.chunked_prefill_attention(q, pool, page_table,
+                                              chunk_start, budgets, stem_cfg,
+                                              k_max)
+    out = jnp.einsum("bhsk,hkd->bsd", o.astype(x.dtype), params["wo"])
+    return out, pool
+
+
 # ---------------------------------------------------------------------------
 # Cross attention (encoder-decoder)
 # ---------------------------------------------------------------------------

@@ -613,52 +613,106 @@ def prefill_kv_pages(params, tokens: jnp.ndarray, true_len: jnp.ndarray,
     return logits[0], new_pools
 
 
-def paged_decode_step(params, tokens: jnp.ndarray, pools,
-                      page_table: jnp.ndarray, cache_lens: jnp.ndarray,
-                      cfg: ArchConfig, *, stem_cfg,
-                      budget_frac: float = 1.0):
-    """One token for every engine slot against the paged Stem KV cache.
+def paged_mixed_step(params, tokens: jnp.ndarray, pools,
+                     page_table: jnp.ndarray, cache_lens: jnp.ndarray,
+                     cfg: ArchConfig, *, stem_cfg,
+                     budget_frac: float = 1.0, chunk=None,
+                     chunk_k_max: int = 0):
+    """One mixed batch of decode tokens + prefill chunks over the page pool.
 
-    tokens: (slots, 1); page_table: (slots, max_pages); cache_lens:
-    (slots,).  Slots with an all-zero page table row (inactive) compute
-    garbage into the reserved trash page and are ignored by the engine.
-    Returns (logits (slots, vocab), new pools).
+    The unified serving step: every layer processes a decode lane
+    (one token per slot, ``apply_decode_paged``) and — when ``chunk`` is
+    given — a chunked-prefill lane (``apply_chunk_paged``) against the
+    *same* per-layer pools, in one trace.  The chunk lane is *narrow*:
+    ``L`` lanes (typically 1, sized by the engine's token budget), each
+    carrying one slot's next chunk and that slot's page-table row — a slot
+    is active in at most one lane per step, and both lanes are
+    row-parallel, so batch-invariance holds across arbitrary decode/prefill
+    mixes.
+
+    tokens: (slots, 1).  ``chunk`` is None (decode-only; this degenerates to
+    the legacy paged decode step) or a dict with, for L chunk lanes:
+      tokens     (L, C) int32, C a multiple of the policy block;
+      page_table (L, max_pages) — a zero row for an idle lane;
+      start      (L,) absolute chunk start (block-aligned);
+      true_len   (L,) true prompt length (K/V zeroed at/after it);
+      budgets    (L, C // block) int32 absolute-row block budgets;
+      last       (L,) in-chunk index whose logits to return (the
+                 prompt's final token, for chunks that finish a prefill).
+
+    Returns (decode logits (slots, vocab),
+             chunk logits (L, vocab) | None, new pools).
     """
     x = common.embed_lookup(params["embed"], tokens, cfg.jnp_dtype)
+    xc = None
+    if chunk is not None:
+        xc = common.embed_lookup(params["embed"], chunk["tokens"], cfg.jnp_dtype)
     if cfg.embed_scale_flag:
         x = x * (cfg.d_model ** 0.5)
+        xc = None if xc is None else xc * (cfg.d_model ** 0.5)
     new_pools = []
     for si, (n, kinds) in enumerate(layer_program(cfg)):
         seg = params[f"segment{si}"]
         pool = pools[si]
 
-        def body(x, scanned, kinds=kinds):
+        def body(carry, scanned, kinds=kinds):
+            x, xc = carry
             layer_params, pool = scanned
             new_pool = {}
             for i, k in enumerate(kinds):
                 p = layer_params[f"sub{i}"]
+                pl = pool[f"sub{i}"]
+                if chunk is not None:
+                    hc = common.rms_norm(xc, p["norm1"])
+                    mix_c, pl = attention.apply_chunk_paged(
+                        p["attn"], hc, cfg, pl, chunk["page_table"],
+                        chunk["start"], chunk["true_len"], chunk["budgets"],
+                        stem_cfg, k_max=chunk_k_max)
+                    xc = xc + mix_c
                 h = common.rms_norm(x, p["norm1"])
-                mix, np_i = attention.apply_decode_paged(
-                    p["attn"], h, cfg, pool[f"sub{i}"], page_table,
+                mix, pl = attention.apply_decode_paged(
+                    p["attn"], h, cfg, pl, page_table,
                     cache_lens, stem_cfg, budget_frac=budget_frac)
-                new_pool[f"sub{i}"] = np_i
                 x = x + mix
-                h2 = common.rms_norm(x, p["norm2"])
-                if k == "moe":
-                    y, _ = moe.apply(p["ffn"], h2, cfg.moe, cfg.activation)
-                else:
-                    y = mlp.apply(p["ffn"], h2, cfg.activation)
-                x = x + y
-            return x, new_pool
+                new_pool[f"sub{i}"] = pl
+
+                def ffn(h2, k=k, p=p):
+                    if k == "moe":
+                        y, _ = moe.apply(p["ffn"], h2, cfg.moe, cfg.activation)
+                        return y
+                    return mlp.apply(p["ffn"], h2, cfg.activation)
+
+                x = x + ffn(common.rms_norm(x, p["norm2"]))
+                if chunk is not None:
+                    xc = xc + ffn(common.rms_norm(xc, p["norm2"]))
+            return (x, xc), new_pool
 
         if n == 1:
-            x, npool = body(x, (jax.tree.map(lambda t: t[0], seg),
-                                jax.tree.map(lambda t: t[0], pool)))
+            (x, xc), npool = body((x, xc),
+                                  (jax.tree.map(lambda t: t[0], seg),
+                                   jax.tree.map(lambda t: t[0], pool)))
             npool = jax.tree.map(lambda t: t[None], npool)
         else:
-            x, npool = jax.lax.scan(body, x, (seg, pool))
+            (x, xc), npool = jax.lax.scan(body, (x, xc), (seg, pool))
         new_pools.append(npool)
-    logits = _logits(params, x, cfg)[:, 0]
+    dec_logits = _logits(params, x, cfg)[:, 0]
+    chunk_logits = None
+    if chunk is not None:
+        xl = jnp.take_along_axis(xc, chunk["last"][:, None, None], axis=1)
+        chunk_logits = _logits(params, xl, cfg)[:, 0]
+    return dec_logits, chunk_logits, new_pools
+
+
+def paged_decode_step(params, tokens: jnp.ndarray, pools,
+                      page_table: jnp.ndarray, cache_lens: jnp.ndarray,
+                      cfg: ArchConfig, *, stem_cfg,
+                      budget_frac: float = 1.0):
+    """One token for every engine slot against the paged Stem KV cache —
+    the decode-only view of ``paged_mixed_step`` (kept for direct callers).
+    Returns (logits (slots, vocab), new pools)."""
+    logits, _, new_pools = paged_mixed_step(
+        params, tokens, pools, page_table, cache_lens, cfg,
+        stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=None)
     return logits, new_pools
 
 

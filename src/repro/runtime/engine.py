@@ -1,33 +1,56 @@
 """Continuous-batching serving engine over the paged Stem KV cache.
 
-The first genuinely multi-tenant workload for the repo: requests with
-arbitrary prompt lengths arrive over time, are admitted into a fixed set of
-decode *slots* as capacity frees up, decode together in one ragged batched
-step per iteration, and release their pages the moment they finish —
-vLLM-shaped scheduling with Stem's coarse-to-fine selection running
-natively on the page pool (a page *is* a Stem block; see
-``runtime/paged.py``).
+Requests with arbitrary prompt lengths arrive over time, are admitted into
+a fixed set of *slots* as capacity frees up, and make progress together in
+**one jitted mixed-batch step per iteration** — vLLM-shaped continuous
+batching with Stem's coarse-to-fine selection running natively on the page
+pool (a page *is* a Stem block; see ``runtime/paged.py``).
+
+Unified step (the default): prefill is **chunked**.  A slot admitted with a
+long prompt does not stall its co-tenants behind a monolithic prefill;
+instead it advances ``chunk_size`` tokens per engine step through the
+chunked-prefill lane of the single jitted ``unified_step``
+(``launch/steps.make_unified_step`` -> ``transformer.paged_mixed_step``),
+riding in the same trace as every decode token.  The step's shapes are
+fixed — a (slots, 1) decode lane plus a narrow (chunk_lanes, chunk_size)
+prefill lane (lanes = the most whole chunks the token budget admits,
+typically 1) — so the engine compiles each of its two signatures (mixed,
+and decode-only for chunk-free steps) **exactly once**, independent of
+prompt lengths (``stats["traces"]``; pinned by ``tests/test_engine.py``).
+The old monolithic path retraced per padded prompt-length bucket.
 
 Engine loop (one ``step()``):
 
   1. **Admission** — FCFS from the waiting queue, gated on arrival step, a
-     free slot, and an all-or-nothing page reservation for
-     ``ceil((prompt_len + max_new_tokens - 1) / page_size)`` pages (the
-     final generated token is never fed back, so never cached).  Admission
-     runs the jitted ``insert_prefill`` (one trace per padded prompt-length
-     bucket) which writes the prompt's K/V pages + block summaries into the
-     pools and returns the first generated token.
-  2. **Batched decode** — one jitted ``batched_decode`` over *all* slots
-     (inactive slots scribble the reserved trash page and are ignored).
-     Every active slot appends its token and samples greedily.
-  3. **Recycling** — slots hitting EOS / max-new-tokens free their pages
-     and return to the free list; the next ``step()`` can re-admit into
-     them immediately.
+     free slot, and an all-or-nothing page reservation for the request's
+     whole lifetime.  Chunked mode resets the reserved pages to pristine
+     and parks the slot in the ``prefill`` phase with a ``prefill_pos``
+     cursor; monolithic mode (``EngineConfig.monolithic_prefill``, the A/B
+     baseline) runs the legacy per-length-bucket prefill inline.
+  2. **Token-budget scheduling** — each step spends at most
+     ``step_token_budget`` tokens: every decode-phase slot's token first,
+     then prefill chunks FCFS while whole chunks fit (at least one chunk is
+     granted when prefill work exists and nothing else would run, so the
+     engine never stalls).  This bounds per-step latency: long prompts cost
+     many small steps instead of one huge one.
+  3. **Mixed step** — one jitted call advances every granted lane.  Decode
+     slots append + sample greedily; prefill slots advance their cursor,
+     and the chunk that completes a prompt yields the request's first
+     token (TTFT) from the chunk-lane logits.
+  4. **Recycling** — slots hitting EOS / max-new-tokens free their pages
+     and return to the free list; the next ``step()`` re-admits.
 
-Determinism / batch-invariance: every per-slot computation in the decode
-step is row-parallel (selection, gather, softmax), so a request's token
-stream is bitwise independent of which slot it occupies and who its
-co-tenants are — ``tests/test_engine.py`` pins this differentially.
+Latency accounting: ``token_latencies_s`` records **inter-token gaps** as
+experienced by the request (time between consecutive emissions — this is
+what surfaces head-of-line blocking stalls), ``ttft_s`` the admission ->
+first-token wall, and ``tpot_s`` the mean per-output-token time after the
+first.  ``benchmarks/serving.py`` reports them separately.
+
+Determinism / batch-invariance: every per-slot computation in both lanes
+is row-parallel (selection, gather, softmax), and chunk boundaries depend
+only on ``chunk_size`` — so a request's token stream is bitwise independent
+of which slot it occupies, who its co-tenants are, and how the token budget
+interleaves its chunks.  ``tests/test_engine.py`` pins this differentially.
 """
 from __future__ import annotations
 
@@ -40,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import chunked as chunked_lib
 from repro.launch import steps as steps_lib
 from repro.models import transformer
 from repro.runtime import paged as paged_lib
@@ -62,8 +86,10 @@ class FinishedRequest:
     slot: int
     admitted_step: int
     finished_step: int
-    ttft_s: float                 # wall-clock prefill (admission) latency
-    token_latencies_s: list       # wall-clock per generated token
+    ttft_s: float                 # admission -> first token (all chunks)
+    tpot_s: float                 # mean per-output-token time after the
+                                  # first (NaN when only one token: undefined)
+    token_latencies_s: list       # inter-token gaps (includes HOL stalls)
 
 
 def pages_needed(prompt_len: int, max_new: int, page_size: int) -> int:
@@ -81,24 +107,40 @@ class EngineConfig:
     ``num_pages`` includes the reserved trash page 0.  A request needs
     ``pages_needed(prompt_len, max_new_tokens, page_size)`` pages for its
     whole lifetime (conservative up-front reservation — no mid-flight OOM),
-    and at most ``max_pages_per_slot`` (the static page-table width)."""
+    and at most ``max_pages_per_slot`` (the static page-table width).
+
+    ``chunk_size`` (tokens, a multiple of the page size; None = 2 pages)
+    fixes the prefill-lane width of the unified step;
+    ``step_token_budget`` (None = max_slots + chunk_size) caps the tokens
+    one step may spend — decode tokens first, then whole prefill chunks.
+    ``monolithic_prefill`` switches to the legacy per-length-trace
+    admission prefill (the chunked-vs-monolithic A/B baseline, and the
+    fallback for threshold selectors chunked prefill cannot serve)."""
     max_slots: int = 4
     num_pages: int = 64
     max_pages_per_slot: int = 16
     budget_frac: float = 1.0      # 1.0 = dense-equivalent oracle arm
     eos_id: Optional[int] = None
+    chunk_size: Optional[int] = None
+    step_token_budget: Optional[int] = None
+    monolithic_prefill: bool = False
 
     @classmethod
     def for_trace(cls, *, max_slots: int, max_prompt: int,
                   max_new_tokens: int, page_size: int,
                   budget_frac: float = 1.0,
-                  eos_id: Optional[int] = None) -> "EngineConfig":
+                  eos_id: Optional[int] = None,
+                  chunk_size: Optional[int] = None,
+                  step_token_budget: Optional[int] = None,
+                  monolithic_prefill: bool = False) -> "EngineConfig":
         """Size the pool so every slot can hold the largest trace request —
         the one place the reservation rule is encoded for drivers."""
         per_slot = pages_needed(max_prompt, max_new_tokens, page_size)
         return cls(max_slots=max_slots, num_pages=1 + max_slots * per_slot,
                    max_pages_per_slot=per_slot, budget_frac=budget_frac,
-                   eos_id=eos_id)
+                   eos_id=eos_id, chunk_size=chunk_size,
+                   step_token_budget=step_token_budget,
+                   monolithic_prefill=monolithic_prefill)
 
 
 @dataclasses.dataclass
@@ -106,17 +148,24 @@ class _SlotState:
     req: Request
     tokens: list
     admitted_step: int
-    ttft_s: float
-    token_latencies_s: list
+    admit_t: float
+    phase: str                    # "prefill" | "decode"
+    prefill_pos: int              # next absolute prompt position to process
+    padded: np.ndarray            # (Lp,) prompt right-padded to a page multiple
+    true_len: int
+    ttft_s: float = 0.0
+    first_token_t: float = 0.0
+    last_token_t: float = 0.0
+    token_latencies_s: list = dataclasses.field(default_factory=list)
 
 
 class StemEngine:
-    """Continuous-batching engine; host-side scheduler + jitted steps.
+    """Continuous-batching engine; host-side scheduler + one jitted step.
 
     ``stem_cfg`` names the engine's sparsity policy: a ``SparsityPolicy``,
     a registered policy name (``"stem"``, ``"streaming"``, …) or a legacy
-    ``StemConfig``.  One policy drives prefill page summaries and decode
-    page selection alike."""
+    ``StemConfig``.  One policy drives chunked prefill page summaries,
+    chunk selection, and decode page selection alike."""
 
     def __init__(self, bundle, params, stem_cfg,
                  ecfg: EngineConfig = EngineConfig()):
@@ -130,6 +179,19 @@ class StemEngine:
         self.stem_cfg = self.policy          # legacy attribute name
         self.ecfg = ecfg
         self.page_size = self.policy.block_size
+        self.chunk_size = ecfg.chunk_size or 2 * self.page_size
+        if self.chunk_size % self.page_size:
+            raise ValueError(
+                f"chunk_size {self.chunk_size} must be a multiple of the "
+                f"page size {self.page_size}")
+        self.token_budget = (ecfg.step_token_budget
+                             or ecfg.max_slots + self.chunk_size)
+        # Static width of the chunked-prefill lane: the most whole chunks
+        # the token budget could ever admit in one step.
+        self.chunk_lanes = min(ecfg.max_slots,
+                               max(1, self.token_budget // self.chunk_size))
+        if not ecfg.monolithic_prefill:
+            chunked_lib.validate_chunked_policy(self.policy)
 
         S, P = ecfg.max_slots, ecfg.max_pages_per_slot
         self.pools = transformer.init_page_pools(
@@ -142,17 +204,38 @@ class StemEngine:
         self.waiting: collections.deque = collections.deque()
         self.finished: list = []
         self.step_count = 0
-        self.stats = {"prefills": 0, "decode_steps": 0, "tokens_generated": 0,
-                      "slots_reused": 0, "max_concurrency": 0}
+        self.stats = {"prefills": 0, "chunks": 0, "decode_steps": 0,
+                      "step_calls": 0, "tokens_generated": 0,
+                      "slots_reused": 0, "max_concurrency": 0,
+                      "traces": 0, "prefill_traces": 0}
         self._slot_ever_used = [False] * S
 
-        self._decode = jax.jit(steps_lib.make_batched_decode(
-            bundle, stem_cfg=self.policy, budget_frac=ecfg.budget_frac),
-            donate_argnums=(2,))
-        # jit retraces per token shape: one trace per padded prompt-length
-        # bucket, cached inside the one jitted callable.
-        self._prefill = jax.jit(steps_lib.make_insert_prefill(
-            bundle, stem_cfg=self.policy), donate_argnums=(3,))
+        def _count(key):
+            def bump():
+                self.stats[key] += 1
+            return bump
+
+        # THE step: decode lane + chunked-prefill lane, fixed shapes.
+        # ``chunk_k_max`` is the static chunk-selection/gather width: the
+        # largest block budget any admissible prompt can reach, so chunk
+        # cost tracks the policy's budget, not the page-table width.
+        # ``stats["traces"]`` counts (re)compiles via a trace-time side
+        # effect — the regression test pins it to the two lane signatures
+        # (mixed / decode-only) across heterogeneous prompt lengths.
+        k_bound = (0 if ecfg.monolithic_prefill else
+                   chunked_lib.chunk_budget_bound(self.policy, P))
+        self._unified = jax.jit(steps_lib.make_unified_step(
+            bundle, stem_cfg=self.policy, budget_frac=ecfg.budget_frac,
+            chunk_k_max=k_bound, on_trace=_count("traces")),
+            donate_argnums=(1,))
+        self._reset = jax.jit(paged_lib.reset_pools_stacked,
+                              donate_argnums=(0,))
+        self._prefill = None
+        if ecfg.monolithic_prefill:
+            # Legacy A/B arm: one trace per padded prompt-length bucket.
+            self._prefill = jax.jit(steps_lib.make_monolithic_prefill(
+                bundle, stem_cfg=self.policy,
+                on_trace=_count("prefill_traces")), donate_argnums=(3,))
 
     # -- scheduling ---------------------------------------------------------
 
@@ -168,11 +251,15 @@ class StemEngine:
         return pages_needed(prompt_len, max_new, self.page_size)
 
     def reset_metrics(self) -> None:
-        """Zero the observability state (finished list, counters, slot-reuse
-        tracking) without touching pools, slots, or the allocator — e.g.
-        after a benchmark warmup pass."""
+        """Zero the workload observability state (finished list, counters,
+        slot-reuse tracking) without touching pools, slots, or the
+        allocator — e.g. after a benchmark warmup pass.  Trace counters are
+        *kept*: they record compiles over the engine's lifetime (a warmed
+        engine adds zero), and benchmarks report them as evidence of the
+        no-retrace property."""
         self.finished.clear()
-        self.stats.update({k: 0 for k in self.stats})
+        keep = ("traces", "prefill_traces")
+        self.stats.update({k: 0 for k in self.stats if k not in keep})
         self._slot_ever_used = [False] * self.ecfg.max_slots
 
     def _free_slot(self) -> Optional[int]:
@@ -199,34 +286,52 @@ class StemEngine:
 
             plen = len(req.prompt)
             npages_prompt = -(-plen // self.page_size)
-            padded = npages_prompt * self.page_size
-            toks = np.zeros((1, padded), np.int32)
-            toks[0, :plen] = req.prompt
-            # Full reservation, trash-padded: prefill resets every page in
-            # the row (recycled pages carry the previous tenant's summaries)
-            # before writing the leading npages_prompt prompt pages.
+            padded_len = npages_prompt * self.page_size
+            # Full reservation, trash-padded.
             row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
             row[:npages] = pages
-            t0 = time.perf_counter()
-            logits, self.pools = self._prefill(
-                self.params, jnp.asarray(toks), jnp.asarray(plen, jnp.int32),
-                self.pools, jnp.asarray(row))
-            first = int(np.argmax(np.asarray(logits)))
-            ttft = time.perf_counter() - t0
-            self.stats["prefills"] += 1
             if self._slot_ever_used[slot]:
                 self.stats["slots_reused"] += 1
             self._slot_ever_used[slot] = True
-
             self.page_table[slot] = row
-            self.cache_lens[slot] = plen
             self.slot_pages[slot] = pages
+            now = time.perf_counter()
+
+            if self.ecfg.monolithic_prefill:
+                # Legacy: prefill the whole prompt at admission (resets the
+                # reserved pages inside prefill_kv_pages), per-length trace.
+                toks = np.zeros((1, padded_len), np.int32)
+                toks[0, :plen] = req.prompt
+                logits, self.pools = self._prefill(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray(plen, jnp.int32), self.pools,
+                    jnp.asarray(row))
+                first = int(np.argmax(np.asarray(logits)))
+                done = time.perf_counter()
+                self.stats["prefills"] += 1
+                self.stats["tokens_generated"] += 1
+                self.cache_lens[slot] = plen
+                st = _SlotState(
+                    req=req, tokens=[first], admitted_step=self.step_count,
+                    admit_t=now, phase="decode", prefill_pos=padded_len,
+                    padded=np.zeros((0,), np.int32), true_len=plen,
+                    ttft_s=done - now, first_token_t=done, last_token_t=done)
+                self.slots[slot] = st
+                if self._is_finished(st):
+                    self._recycle(slot)
+                continue
+
+            # Chunked: reset the reservation to pristine (recycled pages are
+            # dirty; chunk writes + decode increments assume fresh pages),
+            # park the slot mid-prefill with a prefill_pos cursor.
+            self.pools = self._reset(self.pools, jnp.asarray(row))
+            ptoks = np.zeros((padded_len,), np.int32)
+            ptoks[:plen] = req.prompt
+            self.cache_lens[slot] = 0
             self.slots[slot] = _SlotState(
-                req=req, tokens=[first], admitted_step=self.step_count,
-                ttft_s=ttft, token_latencies_s=[])
-            self.stats["tokens_generated"] += 1
-            if self._is_finished(self.slots[slot]):
-                self._recycle(slot)
+                req=req, tokens=[], admitted_step=self.step_count,
+                admit_t=now, phase="prefill", prefill_pos=0, padded=ptoks,
+                true_len=plen)
 
     def _is_finished(self, st: _SlotState) -> bool:
         if len(st.tokens) >= st.req.max_new_tokens:
@@ -235,10 +340,14 @@ class StemEngine:
 
     def _recycle(self, slot: int) -> None:
         st = self.slots[slot]
+        # TPOT is undefined for a single-output-token request (no
+        # post-first token) — record NaN so means can exclude it.
+        tpot = (float("nan") if len(st.tokens) < 2 else
+                (st.last_token_t - st.first_token_t) / (len(st.tokens) - 1))
         self.finished.append(FinishedRequest(
             uid=st.req.uid, prompt_len=len(st.req.prompt), tokens=st.tokens,
             slot=slot, admitted_step=st.admitted_step,
-            finished_step=self.step_count, ttft_s=st.ttft_s,
+            finished_step=self.step_count, ttft_s=st.ttft_s, tpot_s=tpot,
             token_latencies_s=st.token_latencies_s))
         self.allocator.free(self.slot_pages[slot])
         self.page_table[slot] = 0
@@ -246,38 +355,114 @@ class StemEngine:
         self.slot_pages[slot] = None
         self.slots[slot] = None
 
-    def _decode_all(self) -> None:
-        active = [s for s, st in enumerate(self.slots) if st is not None]
-        if not active:
+    def _mixed_step(self) -> None:
+        """One unified-step invocation: every decode-phase slot's token plus
+        as many prefill chunks as the token budget admits."""
+        dec = [s for s, st in enumerate(self.slots)
+               if st is not None and st.phase == "decode"]
+        pre = [s for s, st in enumerate(self.slots)
+               if st is not None and st.phase == "prefill"]
+        if not dec and not pre:
             return
         self.stats["max_concurrency"] = max(self.stats["max_concurrency"],
-                                            len(active))
-        tokens = np.zeros((self.ecfg.max_slots, 1), np.int32)
-        for s in active:
+                                            len(dec) + len(pre))
+
+        # Token budget: decode tokens first, then whole chunks FCFS into the
+        # static chunk lanes.  Always grant at least one chunk when prefill
+        # work exists and no decode token would otherwise run (liveness).
+        C = self.chunk_size
+        remaining = self.token_budget - len(dec)
+        grant = []
+        for s in sorted(pre, key=lambda s: (self.slots[s].admitted_step, s)):
+            if len(grant) >= self.chunk_lanes:
+                break
+            if remaining >= C or (not grant and not dec):
+                grant.append(s)
+                remaining -= C
+
+        S, P = self.ecfg.max_slots, self.ecfg.max_pages_per_slot
+        tokens = np.zeros((S, 1), np.int32)
+        dec_table = np.zeros((S, P), np.int32)
+        dec_lens = np.zeros((S,), np.int32)
+        for s in dec:
             tokens[s, 0] = self.slots[s].tokens[-1]
-        t0 = time.perf_counter()
-        logits, self.pools = self._decode(
-            self.params, jnp.asarray(tokens), self.pools,
-            jnp.asarray(self.page_table), jnp.asarray(self.cache_lens))
-        logits = np.asarray(logits)
-        dt = time.perf_counter() - t0
-        self.stats["decode_steps"] += 1
-        for s in active:
+            dec_table[s] = self.page_table[s]
+            dec_lens[s] = self.cache_lens[s]
+
+        chunk = None
+        if grant:
+            # Narrow chunked-prefill lane: L = chunk_lanes rows, lane i
+            # carrying grant[i]'s next chunk.  With no grants the step runs
+            # the decode-only signature — two static traces total, never
+            # per-prompt-length.
+            L, nc = self.chunk_lanes, C // self.page_size
+            ctoks = np.zeros((L, C), np.int32)
+            ctable = np.zeros((L, P), np.int32)
+            cstart = np.zeros((L,), np.int32)
+            ctrue = np.zeros((L,), np.int32)
+            cbud = np.zeros((L, nc), np.int32)
+            clast = np.zeros((L,), np.int32)
+            for lane, s in enumerate(grant):
+                st = self.slots[s]
+                pos = st.prefill_pos
+                avail = st.padded[pos:pos + C]
+                ctoks[lane, :len(avail)] = avail
+                ctable[lane] = self.page_table[s]
+                cstart[lane] = pos
+                ctrue[lane] = st.true_len
+                cbud[lane] = chunked_lib.chunk_budget_rows(
+                    self.policy, len(st.padded), pos, nc)
+                clast[lane] = min(max(st.true_len - 1 - pos, 0), C - 1)
+            chunk = {"tokens": jnp.asarray(ctoks),
+                     "page_table": jnp.asarray(ctable),
+                     "start": jnp.asarray(cstart),
+                     "true_len": jnp.asarray(ctrue),
+                     "budgets": jnp.asarray(cbud),
+                     "last": jnp.asarray(clast)}
+
+        dec_logits, chunk_logits, self.pools = self._unified(
+            self.params, self.pools, jnp.asarray(tokens),
+            jnp.asarray(dec_table), jnp.asarray(dec_lens), chunk)
+        if dec:
+            dec_logits = np.asarray(dec_logits)
+        if grant:
+            chunk_logits = np.asarray(chunk_logits)
+        now = time.perf_counter()
+        self.stats["step_calls"] += 1
+        if dec:
+            self.stats["decode_steps"] += 1
+
+        for s in dec:
             self.cache_lens[s] += 1       # the fed-back token is now cached
-            nxt = int(np.argmax(logits[s]))
             st = self.slots[s]
-            st.tokens.append(nxt)
-            # every active request waits the whole batched step for its
-            # token, so the step wall-time IS the per-token latency
-            st.token_latencies_s.append(dt)
+            st.tokens.append(int(np.argmax(dec_logits[s])))
+            st.token_latencies_s.append(now - st.last_token_t)
+            st.last_token_t = now
             self.stats["tokens_generated"] += 1
             if self._is_finished(st):
                 self._recycle(s)
 
+        for lane, s in enumerate(grant):
+            st = self.slots[s]
+            st.prefill_pos += C
+            self.stats["chunks"] += 1
+            if st.prefill_pos >= len(st.padded):
+                # This chunk completed the prompt: its logits at the true
+                # last token are the request's first generated token.
+                st.tokens = [int(np.argmax(chunk_logits[lane]))]
+                st.phase = "decode"
+                self.cache_lens[s] = st.true_len
+                st.first_token_t = st.last_token_t = now
+                st.ttft_s = now - st.admit_t
+                self.stats["prefills"] += 1
+                self.stats["tokens_generated"] += 1
+                if self._is_finished(st):
+                    self._recycle(s)
+
     def step(self) -> None:
-        """One engine iteration: admit, decode every active slot, recycle."""
+        """One engine iteration: admit, one mixed batched step, recycle."""
         self._admit()
-        self._decode_all()
+        self._mixed_step()
         self.step_count += 1
 
     @property

@@ -110,6 +110,84 @@ def write_prefill_pages(pool: PagePool, page_ids: jnp.ndarray,
     )
 
 
+def reset_pools_stacked(pools, page_ids: jnp.ndarray):
+    """``reset_pages`` over the engine's per-layer pool tree (PagePool
+    leaves stacked ``(n_layers, hk, P, ...)``).  Runs once per admission in
+    the chunked engine: chunk writes fully rewrite the prompt pages, but the
+    decode-spill pages and the chunk grid's overrun pages must start
+    pristine (the allocator recycles pages dirty, and ``append_token``'s
+    kg-add / vm-max increments assume fresh pages)."""
+    def one(pool: PagePool) -> PagePool:
+        return PagePool(
+            k=pool.k.at[:, :, page_ids].set(0),
+            v=pool.v.at[:, :, page_ids].set(0),
+            kg=pool.kg.at[:, :, page_ids].set(0),
+            vm=pool.vm.at[:, :, page_ids].set(decode_lib.V_MAG_FLOOR),
+        )
+
+    return jax.tree.map(one, pools,
+                        is_leaf=lambda x: isinstance(x, PagePool))
+
+
+def write_chunk_pages(pool: PagePool, page_table: jnp.ndarray,
+                      chunk_start: jnp.ndarray, k_chunk: jnp.ndarray,
+                      v_chunk: jnp.ndarray, true_len: jnp.ndarray,
+                      cfg) -> PagePool:
+    """Scatter one prefill *chunk* per slot into the pool, summaries included.
+
+    The chunked-prefill write path: chunk starts are block-aligned and the
+    chunk width is a page multiple, so every page a chunk touches is written
+    whole — k/v zeroed at positions >= ``true_len`` (matching the
+    zero-padded-cache semantics of ``write_prefill_pages``), kg/vm pooled
+    from the zeroed chunk.  Building a prompt up chunk by chunk therefore
+    reproduces ``write_prefill_pages`` of the full sequence page-for-page
+    (pinned by ``tests/test_chunked.py``), and the partial final page is
+    left exactly where ``append_token`` can continue it incrementally.
+
+    page_table: (slots, max_pages) global page ids (all-zero rows for slots
+    without a chunk this step — their writes land in the trash page).
+    chunk_start, true_len: (slots,) int32 absolute positions.
+    k_chunk, v_chunk: (slots, hk, C, d) with C % page_size == 0.
+    Chunk-grid overrun past the prompt's pages writes the pristine value
+    (zeros + the vm floor) into reserved-but-unused spill pages — harmless,
+    decode has not started for a slot still prefilling.
+    """
+    cfg = policy_lib.as_policy(cfg)
+    slots, hk, c, d = k_chunk.shape
+    bs = cfg.block_size
+    nc = c // bs
+    pos = chunk_start[:, None] + jnp.arange(c)                  # (slots, C)
+    keep = (pos < true_len[:, None])[:, None, :, None]
+    k = jnp.where(keep, k_chunk, 0)
+    v = jnp.where(keep, v_chunk, 0)
+    kg = metric_lib.antidiag_pool(k, bs, cfg.stride)      # (slots, hk, nc, s, d)
+    vm = metric_lib.value_block_magnitude(v, bs)          # (slots, hk, nc)
+    kp = k.reshape(slots, hk, nc, bs, d)
+    vp = v.reshape(slots, hk, nc, bs, d)
+
+    maxp = page_table.shape[1]
+    j_abs = chunk_start[:, None] // bs + jnp.arange(nc)[None, :]  # (slots, nc)
+    # Chunk-grid blocks past the page-table width go to the trash page —
+    # never clamp onto page maxp-1, which may hold real data from this very
+    # chunk (all-zero payload either way: overrun positions are >= true_len).
+    pids = jnp.where(
+        j_abs < maxp,
+        jnp.take_along_axis(page_table, jnp.minimum(j_abs, maxp - 1), axis=1),
+        TRASH_PAGE)
+    flat = pids.reshape(-1)                                       # (slots*nc,)
+
+    def per_head(x):
+        # (slots, hk, nc, ...) -> (hk, slots*nc, ...) aligned with ``flat``.
+        return jnp.swapaxes(x, 0, 1).reshape((hk, slots * nc) + x.shape[3:])
+
+    return PagePool(
+        k=pool.k.at[:, flat].set(per_head(kp).astype(pool.k.dtype)),
+        v=pool.v.at[:, flat].set(per_head(vp).astype(pool.v.dtype)),
+        kg=pool.kg.at[:, flat].set(per_head(kg).astype(jnp.float32)),
+        vm=pool.vm.at[:, flat].set(per_head(vm).astype(jnp.float32)),
+    )
+
+
 def append_token(pool: PagePool, page_table: jnp.ndarray,
                  cache_lens: jnp.ndarray, k_new: jnp.ndarray,
                  v_new: jnp.ndarray, cfg) -> PagePool:

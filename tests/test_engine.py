@@ -4,10 +4,15 @@ The load-bearing property is **batch-invariance**: a request's greedy token
 stream must be bitwise independent of which slot it lands in, who its
 co-tenants are, and when it arrives — the engine trace with mixed prompt
 lengths and staggered arrivals must reproduce each request decoded alone in
-a fresh single-slot engine.  Plus lifecycle invariants: staggered requests
-are never admitted early, freed slots are reused, and every page returns to
-the allocator at drain.
+a fresh single-slot engine.  Under the unified step this also covers
+chunked prefill: chunk boundaries depend only on chunk_size, never on
+co-tenants or the token budget's interleaving.  Plus lifecycle invariants:
+staggered requests are never admitted early, freed slots are reused, every
+page returns to the allocator at drain, and the unified step compiles a
+fixed number of traces regardless of prompt lengths.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -136,7 +141,7 @@ def test_eos_stops_decode(built):
     req = _requests()[1]
     ref = StemEngine(bundle, params, STEM, _ecfg(1, 1.0)).run([req])[0]
     eos = ref.tokens[2]  # force a stop after the 3rd token
-    ecfg = EngineConfig(**{**_ecfg(1, 1.0).__dict__, "eos_id": eos})
+    ecfg = dataclasses.replace(_ecfg(1, 1.0), eos_id=eos)
     cut = StemEngine(bundle, params, STEM, ecfg).run([req])[0]
     stop = ref.tokens.index(eos) + 1
     assert cut.tokens == ref.tokens[:stop]
@@ -173,6 +178,34 @@ def test_page_recycling_isolation(built):
                                max_new_tokens=second.max_new_tokens)])
     assert reused[1].tokens == alone[0].tokens, (
         "second tenant's tokens depend on the recycled pages' history")
+
+
+def test_unified_step_trace_counts(built):
+    """The chunked engine's unified step compiles exactly once per lane
+    signature (mixed and decode-only), independent of prompt lengths —
+    heterogeneous and novel prompt lengths must add ZERO traces.  The
+    monolithic baseline retraces per padded prompt-length bucket."""
+    bundle, params = built
+    engine = StemEngine(bundle, params, STEM, _ecfg(2, 1.0))
+    engine.run(_requests())
+    assert engine.stats["traces"] == 2, "one mixed + one decode-only trace"
+    assert engine.stats["prefill_traces"] == 0
+
+    rng = np.random.RandomState(23)
+    novel = [Request(uid=100 + i,
+                     prompt=rng.randint(0, TINY.vocab_size,
+                                        size=(p,)).astype(np.int32),
+                     max_new_tokens=2)
+             for i, p in enumerate((7, 21, 30))]    # new padded buckets
+    engine.run(novel)
+    assert engine.stats["traces"] == 2, "novel prompt lengths retraced"
+
+    mono = StemEngine(bundle, params, STEM,
+                      dataclasses.replace(_ecfg(2, 1.0),
+                                          monolithic_prefill=True))
+    mono.run(_requests())
+    # TRACE prompt lengths pad to buckets {8, 16, 24} -> 3 prefill traces.
+    assert mono.stats["prefill_traces"] == 3
 
 
 def test_append_token_matches_prefill_pages():
