@@ -22,8 +22,20 @@ Two studies, both on the paged Stem KV cache (``runtime/engine.py``):
      trace counts.  The chunked arm should show strictly lower p95 with
      TTFT within 2x.
 
+  3. **FCFS vs SLO scheduler under overload** (``--slo``,
+     ``BENCH_slo.json``) — arrival exceeds capacity (step token budget
+     below the decode-saturated demand) while a few high-priority
+     interactive requests with tight SLOs land mid-flight.  The FCFS arm
+     defers their decode tokens behind the whole backlog; the SLO arm
+     grants priority + SLO-headroom first and preempts low-priority
+     residents (host page offload) at admission.  Headline: HP p99 decode
+     latency, strictly better under the SLO scheduler.  ``--chaos`` runs
+     the SLO arm under fault injection (alloc denial, step failure,
+     restore failure) — the resilience configuration CI exercises.
+
 Standalone: ``PYTHONPATH=src python benchmarks/serving.py [--quick]
-[--chunked]``.  Both reports feed CI's perf-trajectory artifacts.
+[--chunked] [--slo [--chaos]]``.  All reports feed CI's perf-trajectory
+artifacts.
 """
 from __future__ import annotations
 
@@ -271,6 +283,182 @@ def run_chunked_bench(quick: bool) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Overload study: SLO scheduler + preemption vs FCFS (BENCH_slo.json)
+# ---------------------------------------------------------------------------
+
+def build_overload_workload(rng, *, n_lp: int, n_hp: int, lp_prompt: tuple,
+                            hp_prompt: tuple, lp_decode: int, hp_decode: int,
+                            hp_arrival0: int, hp_every: int,
+                            hp_tpot_slo_s: float, hp_ttft_slo_s: float,
+                            vocab: int):
+    """Arrival > capacity: a steady stream of low-priority requests saturates
+    the slots and the step token budget; a few high-priority interactive
+    requests with tight SLOs land mid-flight.  Under FCFS the late HP
+    arrivals queue behind everything; the SLO scheduler preempts for them
+    at admission and grants their decode tokens first."""
+    from repro.runtime.engine import Request
+
+    reqs = []
+    for i in range(n_lp):
+        plen = int(rng.randint(lp_prompt[0], lp_prompt[1] + 1))
+        reqs.append(Request(
+            uid=i, prompt=rng.randint(0, vocab, size=(plen,)).astype(np.int32),
+            max_new_tokens=lp_decode, arrival_step=i, priority=0))
+    for j in range(n_hp):
+        plen = int(rng.randint(hp_prompt[0], hp_prompt[1] + 1))
+        reqs.append(Request(
+            uid=n_lp + j,
+            prompt=rng.randint(0, vocab, size=(plen,)).astype(np.int32),
+            max_new_tokens=hp_decode,
+            arrival_step=hp_arrival0 + j * hp_every, priority=1,
+            tpot_slo_s=hp_tpot_slo_s, ttft_slo_s=hp_ttft_slo_s))
+    return reqs
+
+
+def run_slo_arm(bundle, params, stem_cfg, *, scheduler: str, max_slots: int,
+                step_token_budget: int, workload_kw: dict,
+                chaos: bool = False, seed: int = 0) -> dict:
+    from repro.runtime.engine import EngineConfig, StemEngine
+
+    max_prompt = max(workload_kw["lp_prompt"][1], workload_kw["hp_prompt"][1])
+    decode_max = max(workload_kw["lp_decode"], workload_kw["hp_decode"])
+    ecfg = EngineConfig.for_trace(
+        max_slots=max_slots, max_prompt=max_prompt,
+        max_new_tokens=decode_max, page_size=stem_cfg.block_size,
+        budget_frac=STEM_BUDGET, step_token_budget=step_token_budget,
+        scheduler=scheduler)
+    injector = None
+    if chaos:
+        from repro.runtime.chaos import ChaosConfig, ChaosInjector
+        injector = ChaosInjector(ChaosConfig(
+            deny_alloc_steps=(3,), fail_steps=(5,), fail_restore_steps=(11,)))
+    engine = StemEngine(bundle, params, stem_cfg, ecfg, chaos=injector)
+    vocab = bundle.cfg.vocab_size
+    mk = lambda: build_overload_workload(np.random.RandomState(seed),
+                                         vocab=vocab, **workload_kw)
+
+    # Warmup on a twin engine with the identical workload (same scheduler,
+    # so the SLO twin also compiles the preempt extract/restore jits), then
+    # share every compiled step — the timed run below measures scheduling,
+    # not XLA compilation, and chaos steps stay in engine-step coordinates.
+    warm = StemEngine(bundle, params, stem_cfg, ecfg)
+    warm.run(mk())
+    engine._unified = warm._unified
+    engine._reset = warm._reset
+    engine._extract = warm._extract
+    engine._restore_pages = warm._restore_pages
+    engine.stats["traces"] = warm.stats["traces"]
+
+    trace = mk()
+    t0 = time.perf_counter()
+    finished = engine.run(trace)
+    wall = time.perf_counter() - t0
+
+    n_lp = workload_kw["n_lp"]
+    ok = [f for f in finished if f.error is None]
+    hp = [f for f in ok if f.uid >= n_lp]
+    lp = [f for f in ok if f.uid < n_lp]
+    hp_lats = np.asarray([t for f in hp for t in f.token_latencies_s])
+    lp_lats = np.asarray([t for f in lp for t in f.token_latencies_s])
+    total_tokens = sum(len(f.tokens) for f in finished)
+    s = engine.stats
+    return {
+        "arm": scheduler + ("+chaos" if chaos else ""),
+        "scheduler": scheduler,
+        "chaos": chaos,
+        "requests": len(finished),
+        "failed": sum(f.error is not None for f in finished),
+        "total_tokens": total_tokens,
+        "wall_s": wall,
+        "throughput_tok_s": total_tokens / max(wall, 1e-9),
+        "hp_decode_p50_ms": float(np.percentile(hp_lats, 50) * 1e3),
+        "hp_decode_p99_ms": float(np.percentile(hp_lats, 99) * 1e3),
+        "hp_ttft_ms_mean": float(np.mean([f.ttft_s for f in hp]) * 1e3),
+        "hp_ttft_ms_max": float(np.max([f.ttft_s for f in hp]) * 1e3),
+        "lp_decode_p99_ms": (float(np.percentile(lp_lats, 99) * 1e3)
+                             if lp_lats.size else 0.0),
+        "preemptions": s["preemptions"],
+        "restores": s["restores"],
+        "decode_deferrals": s["decode_deferrals"],
+        "chunk_caps": s["chunk_caps"],
+        "starvation_grants": s["starvation_grants"],
+        "step_failures": s["step_failures"],
+        "restore_failures": s["restore_failures"],
+        "alloc_denials": s["alloc_denials"],
+        "aborts": s["aborts"],
+        "offload_peak_bytes": engine.metrics["offload_peak_bytes"],
+        "traces": s["traces"],
+    }
+
+
+def run_slo_bench(quick: bool, chaos: bool = False) -> dict:
+    """Overload A/B: FCFS baseline vs the SLO scheduler (+ optional chaos
+    configuration on the SLO arm — CI's resilience gate).  The headline
+    number is high-priority p99 decode latency: the SLO arm must beat FCFS
+    strictly, since FCFS defers late arrivals' decode tokens behind the
+    whole saturated budget while the SLO arm grants them first and preempts
+    low-priority residents at admission."""
+    import jax
+    from repro.models import registry
+
+    cfg = QUICK_ARCH if quick else FULL_ARCH
+    stem_cfg = _stem_cfg(quick)
+    bundle = registry.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    bs = stem_cfg.block_size
+    max_slots = 4
+    # Budget below the decode-saturated demand (4 active decodes) so the
+    # scheduler must choose whom to defer every step — the overload regime.
+    step_token_budget = 3
+    workload_kw = dict(
+        n_lp=10 if quick else 12,
+        n_hp=3,
+        lp_prompt=(bs, 2 * bs),
+        hp_prompt=(bs, 2 * bs),
+        lp_decode=16 if quick else 24,
+        hp_decode=12 if quick else 16,
+        hp_arrival0=8,
+        hp_every=6,
+        hp_tpot_slo_s=0.05,
+        hp_ttft_slo_s=0.5,
+    )
+
+    cells = []
+    for scheduler, arm_chaos in (("fcfs", False), ("slo", chaos)):
+        cell = run_slo_arm(bundle, params, stem_cfg, scheduler=scheduler,
+                           max_slots=max_slots,
+                           step_token_budget=step_token_budget,
+                           workload_kw=workload_kw, chaos=arm_chaos)
+        print(f"{cell['arm']:>10}: HP decode p50 {cell['hp_decode_p50_ms']:.2f}"
+              f" / p99 {cell['hp_decode_p99_ms']:.2f} ms, HP TTFT "
+              f"{cell['hp_ttft_ms_mean']:.1f} ms (max "
+              f"{cell['hp_ttft_ms_max']:.1f}); LP p99 "
+              f"{cell['lp_decode_p99_ms']:.2f} ms; preempt "
+              f"{cell['preemptions']}, deferrals {cell['decode_deferrals']}, "
+              f"{cell['throughput_tok_s']:.1f} tok/s", flush=True)
+        cells.append(cell)
+    fcfs, slo = cells
+    return {
+        "benchmark": "serving_slo",
+        "mode": "quick" if quick else "full",
+        "chaos": chaos,
+        "backend": jax.default_backend(),
+        "arch": cfg.name,
+        "block_size": bs,
+        "budget_frac": STEM_BUDGET,
+        "max_slots": max_slots,
+        "step_token_budget": step_token_budget,
+        "workload": {k: (list(v) if isinstance(v, tuple) else v)
+                     for k, v in workload_kw.items()},
+        "cells": cells,
+        "hp_p99_speedup_vs_fcfs":
+            fcfs["hp_decode_p99_ms"] / max(slo["hp_decode_p99_ms"], 1e-9),
+        "hp_ttft_speedup_vs_fcfs":
+            fcfs["hp_ttft_ms_mean"] / max(slo["hp_ttft_ms_mean"], 1e-9),
+    }
+
+
 def run(quick: bool = True):
     """benchmarks/run.py entry point: CSV rows per cell (both studies)."""
     rows = []
@@ -292,6 +480,14 @@ def run(quick: bool = True):
             f"ttft_ms={c['long_ttft_ms_mean']:.1f};"
             f"traces={c['traces']}+{c['prefill_traces']}",
         ))
+    slo = run_slo_bench(quick)
+    for c in slo["cells"]:
+        rows.append((
+            f"serving/slo/{c['arm']}",
+            c["hp_decode_p99_ms"] * 1e3,
+            f"hp_ttft_ms={c['hp_ttft_ms_mean']:.1f};"
+            f"preempt={c['preemptions']};deferrals={c['decode_deferrals']}",
+        ))
     return rows
 
 
@@ -302,10 +498,19 @@ def main() -> None:
     ap.add_argument("--chunked", action="store_true",
                     help="run the chunked-vs-monolithic mixed workload "
                          "instead of the stem-on/off study")
+    ap.add_argument("--slo", action="store_true",
+                    help="run the overload study: FCFS vs the SLO scheduler "
+                         "with preemption (BENCH_slo.json)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --slo: run the SLO arm under fault injection "
+                         "(alloc denial, step failure, restore failure)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    if args.chunked:
+    if args.slo:
+        report = run_slo_bench(args.quick, chaos=args.chaos)
+        out = args.out or "BENCH_slo.json"
+    elif args.chunked:
         report = run_chunked_bench(args.quick)
         out = args.out or "BENCH_chunked.json"
     else:

@@ -40,34 +40,44 @@ import numpy as np
 
 def build_trace(rng: np.random.RandomState, n_requests: int, min_prompt: int,
                 max_prompt: int, decode_tokens: int, vocab: int,
-                arrival_every: int):
-    """Mixed-length, staggered-arrival request trace."""
+                arrival_every: int, hp_every: int = 0,
+                hp_ttft_slo_s: float = None, hp_tpot_slo_s: float = None):
+    """Mixed-length, staggered-arrival request trace.  With ``hp_every``,
+    every hp_every-th request is priority 1 and carries the given SLOs —
+    the interactive class of the overload study."""
     from repro.runtime.engine import Request
     reqs = []
     for i in range(n_requests):
         plen = int(rng.randint(min_prompt, max_prompt + 1))
+        hp = bool(hp_every) and (i % hp_every == hp_every - 1)
         reqs.append(Request(
             uid=i,
             prompt=rng.randint(0, vocab, size=(plen,)).astype(np.int32),
             max_new_tokens=decode_tokens,
             arrival_step=i * arrival_every,
+            priority=1 if hp else 0,
+            ttft_slo_s=hp_ttft_slo_s if hp else None,
+            tpot_slo_s=hp_tpot_slo_s if hp else None,
         ))
     return reqs
 
 
 def _latency_stats(finished):
-    """Serving-latency summary: inter-token decode gaps (p50/p95 — these
-    surface head-of-line stalls), TTFT, and TPOT, reported separately."""
+    """Serving-latency summary: inter-token decode gaps (p50/p95/p99 —
+    these surface head-of-line stalls and swapped-out time), TTFT, and
+    TPOT, reported separately.  NaN entries (shed/aborted requests never
+    emitted a token; single-token requests have no TPOT) are excluded."""
     lats = np.asarray([t for f in finished for t in f.token_latencies_s])
-    ttfts = np.asarray([f.ttft_s for f in finished])
-    # tpot_s is NaN for single-output-token requests (TPOT undefined there).
-    tpots = np.asarray([f.tpot_s for f in finished])
+    ttfts = np.asarray([f.ttft_s for f in finished], np.float64)
+    ttfts = ttfts[~np.isnan(ttfts)] if ttfts.size else ttfts
+    tpots = np.asarray([f.tpot_s for f in finished], np.float64)
     tpots = tpots[~np.isnan(tpots)] if tpots.size else tpots
-    out = {"p50_ms": 0.0, "p95_ms": 0.0, "ttft_ms_mean": 0.0,
+    out = {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0, "ttft_ms_mean": 0.0,
            "ttft_ms_p95": 0.0, "tpot_ms_mean": 0.0}
     if lats.size:
         out["p50_ms"] = float(np.percentile(lats, 50) * 1e3)
         out["p95_ms"] = float(np.percentile(lats, 95) * 1e3)
+        out["p99_ms"] = float(np.percentile(lats, 99) * 1e3)
     if ttfts.size:
         out["ttft_ms_mean"] = float(np.mean(ttfts) * 1e3)
         out["ttft_ms_p95"] = float(np.percentile(ttfts, 95) * 1e3)
@@ -86,30 +96,53 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
         budget_frac=budget_frac,
         chunk_size=args.chunk_size or None,
         step_token_budget=args.step_token_budget or None,
-        monolithic_prefill=args.monolithic)
-    engine = StemEngine(bundle, params, stem_cfg, ecfg)
+        monolithic_prefill=args.monolithic,
+        scheduler=args.scheduler,
+        max_waiting=args.max_waiting or None)
+    chaos = None
+    if args.chaos:
+        from repro.runtime.chaos import ChaosConfig, ChaosInjector
+        chaos = ChaosInjector(ChaosConfig(deny_alloc_steps=(2,),
+                                          fail_steps=(4,),
+                                          fail_restore_steps=(7,)))
+    engine = StemEngine(bundle, params, stem_cfg, ecfg, chaos=chaos)
     rng = np.random.RandomState(args.seed + 1)
     trace = build_trace(rng, args.requests, args.min_prompt, args.max_prompt,
-                        args.decode_tokens, cfg.vocab_size, args.arrival_every)
+                        args.decode_tokens, cfg.vocab_size, args.arrival_every,
+                        hp_every=args.hp_every,
+                        hp_ttft_slo_s=args.hp_ttft_slo_ms * 1e-3,
+                        hp_tpot_slo_s=args.hp_tpot_slo_ms * 1e-3)
     t0 = time.perf_counter()
     finished = engine.run(trace)
     wall = time.perf_counter() - t0
-    stats = _latency_stats(finished)
+    ok = [f for f in finished if f.error is None]
+    failed = [f for f in finished if f.error is not None]
+    stats = _latency_stats(ok)
     total_tokens = sum(len(f.tokens) for f in finished)
+    metrics = engine.metrics
     out = {
         "mode": "engine",
         "prefill": "monolithic" if args.monolithic else "chunked",
+        "scheduler": ecfg.scheduler,
         "chunk_size": engine.chunk_size,
         "step_token_budget": engine.token_budget,
         "requests": len(finished),
+        "failed": {f.uid: f.error for f in failed},
         "total_tokens": total_tokens,
         "wall_s": wall,
         "throughput_tok_s": total_tokens / max(wall, 1e-9),
         "engine_stats": dict(engine.stats),
+        "engine_metrics": {
+            "step_time_ema_s": metrics["step_time_ema_s"],
+            "straggler_steps": metrics["straggler_steps"],
+            "offload_peak_bytes": metrics["offload_peak_bytes"],
+            "chaos": metrics["chaos"],
+        },
         "tokens": {f.uid: f.tokens for f in finished},
         **stats,
     }
-    print(f"engine ({out['prefill']}): {len(finished)} reqs, {total_tokens} "
+    print(f"engine ({out['prefill']}, {ecfg.scheduler}): {len(finished)} "
+          f"reqs ({len(failed)} failed), {total_tokens} "
           f"tokens in {wall*1e3:.0f} ms -> {out['throughput_tok_s']:.1f} "
           f"tok/s; TTFT {out['ttft_ms_mean']:.1f} ms; TPOT "
           f"{out['tpot_ms_mean']:.2f} ms; inter-token p50 "
@@ -118,6 +151,20 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
           f"+{engine.stats['prefill_traces']} prefill; "
           f"slots reused {engine.stats['slots_reused']}, "
           f"max concurrency {engine.stats['max_concurrency']}", flush=True)
+    s = engine.stats
+    if any(s[k] for k in ("preemptions", "shed", "aborts", "step_failures",
+                          "restore_failures", "straggler_steps")):
+        print(f"  resilience: preemptions {s['preemptions']} "
+              f"(restores {s['restores']}), shed {s['shed']}, aborts "
+              f"{s['aborts']}, step failures {s['step_failures']}, restore "
+              f"failures {s['restore_failures']}; offload peak "
+              f"{metrics['offload_peak_bytes']} B", flush=True)
+    if metrics["straggler_steps"]:
+        worst = max(metrics["straggler_steps"], key=lambda f: f[1])
+        print(f"  stragglers: {len(metrics['straggler_steps'])} flagged "
+              f"steps (EMA {metrics['step_time_ema_s']*1e3:.2f} ms; worst "
+              f"step {worst[0]} at {worst[1]*1e3:.1f} ms vs EMA "
+              f"{worst[2]*1e3:.2f} ms)", flush=True)
     return out
 
 
@@ -212,6 +259,24 @@ def main(argv=None) -> dict:
                     help="legacy one-shot admission prefill (per-length "
                          "traces, head-of-line blocking) — the chunked A/B "
                          "baseline")
+    ap.add_argument("--scheduler", choices=("slo", "fcfs"), default="slo",
+                    help="token-budget scheduling order: 'slo' = priority + "
+                         "SLO headroom (preemption-capable), 'fcfs' = "
+                         "admission order (the PR 5 baseline)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="waiting-queue bound; overflow sheds the lowest-"
+                         "priority pending request (0 = unbounded)")
+    ap.add_argument("--hp-every", type=int, default=0,
+                    help="every Nth request is priority 1 with the --hp-* "
+                         "SLOs (0 = uniform priority)")
+    ap.add_argument("--hp-ttft-slo-ms", type=float, default=500.0,
+                    help="TTFT SLO for the high-priority class")
+    ap.add_argument("--hp-tpot-slo-ms", type=float, default=50.0,
+                    help="TPOT SLO for the high-priority class")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a fixed fault plan (alloc denial, step "
+                         "failure, restore failure) — resilience demo; the "
+                         "run must still complete every request")
     ap.add_argument("--fixed-batch", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

@@ -162,6 +162,30 @@ def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
     return unified_step
 
 
+def make_page_extract():
+    """(pools, page_row) -> snapshot: gather one slot's pages (K/V + kg/vm
+    summaries) out of every layer's pool for host offload.  ``page_row`` is
+    the fixed-width ``(max_pages_per_slot,)`` trash-padded page-id row, so
+    the engine jits this exactly once — preemption adds zero traces."""
+    from repro.runtime import offload as offload_lib
+
+    def extract_pages(pools, page_row):
+        return offload_lib.gather_pages(pools, page_row)
+    return extract_pages
+
+
+def make_page_restore():
+    """(pools, page_row, snapshot) -> pools: scatter an offloaded snapshot
+    back into freshly allocated pages.  Bit-identical inverse of
+    ``make_page_extract`` modulo page renaming (the page-table row carries
+    the new mapping); jitted once, donates the pools."""
+    from repro.runtime import offload as offload_lib
+
+    def restore_pages(pools, page_row, snapshot):
+        return offload_lib.scatter_pages(pools, page_row, snapshot)
+    return restore_pages
+
+
 def make_monolithic_prefill(bundle: registry.ModelBundle, *, stem_cfg,
                             on_trace=None):
     """(params, tokens (1, Lp), true_len, pools, page_row) ->

@@ -1,19 +1,27 @@
 from repro.runtime.straggler import StragglerMonitor
 from repro.runtime.fault_tolerance import (FailureInjector, InjectedFailure,
                                            run_with_restarts)
+from repro.runtime.chaos import ChaosConfig, ChaosInjector
 
 __all__ = ["StragglerMonitor", "FailureInjector", "InjectedFailure",
-           "run_with_restarts", "Request", "FinishedRequest", "EngineConfig",
-           "StemEngine", "PageAllocator", "PagePool"]
+           "run_with_restarts", "ChaosConfig", "ChaosInjector",
+           "Request", "FinishedRequest", "EngineConfig", "StemEngine",
+           "EngineStalledError", "PageAllocator", "PagePool",
+           "HostPageStore"]
 
 
 def __getattr__(name):
-    # Lazy: engine pulls in jax/models; keep the lightweight runtime imports
-    # (straggler/fault-tolerance) usable without tracing machinery.
-    if name in ("Request", "FinishedRequest", "EngineConfig", "StemEngine"):
+    # Lazy: engine/offload pull in jax/models; keep the lightweight runtime
+    # imports (straggler/fault-tolerance/chaos) usable without tracing
+    # machinery.
+    if name in ("Request", "FinishedRequest", "EngineConfig", "StemEngine",
+                "EngineStalledError"):
         from repro.runtime import engine as _engine
         return getattr(_engine, name)
     if name in ("PageAllocator", "PagePool"):
         from repro.runtime import paged as _paged
         return getattr(_paged, name)
+    if name == "HostPageStore":
+        from repro.runtime import offload as _offload
+        return getattr(_offload, name)
     raise AttributeError(name)

@@ -1,0 +1,74 @@
+"""Engine-level fault injection: the serving-side chaos harness.
+
+Generalizes the training path's ``FailureInjector`` (one channel: "the
+step raised") into the failure modes a serving engine actually meets,
+each injectable at configured *engine* steps:
+
+  * **allocator exhaustion** (``deny_alloc_steps``) — an allocation that
+    should succeed reports no memory.  The engine must treat it exactly
+    like a genuinely full pool: the admission blocks (or sheds) and retries
+    next step; nothing leaks, nothing crashes.
+  * **step failure** (``fail_steps``) — the mixed batched step raises
+    *before* any pool mutation (the injection point is ahead of the jitted
+    call, which is what makes bounded retry sound: no partial summary
+    increments to double-apply).  Transient by default; ``step_repeats``
+    > the engine's retry bound models a persistent fault, which the engine
+    degrades through by aborting its lowest-priority active request and
+    retrying with the smaller batch.
+  * **restore failure** (``fail_restore_steps``) — re-admitting an
+    offloaded request fails mid-swap-in.  The engine must free the freshly
+    allocated pages (conservation), keep the host snapshot, and either
+    retry later or abort the request with an explicit error.
+
+Every injection is deterministic (configured steps, no RNG) so chaos runs
+are reproducible and assertable in CI.  ``counts`` records what actually
+fired, which the chaos tests cross-check against engine stats.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.runtime.fault_tolerance import FailureInjector, InjectedFailure
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Deterministic injection plan, in engine-step coordinates."""
+    deny_alloc_steps: tuple = ()     # page allocations forced to fail
+    fail_steps: tuple = ()           # mixed steps that raise pre-mutation
+    fail_restore_steps: tuple = ()   # offload restores that raise mid-swap
+    step_repeats: int = 1            # consecutive failures per fail_step
+    restore_repeats: int = 1         # consecutive failures per restore step
+
+
+class ChaosInjector:
+    """Per-channel failure injectors + fired counters for one engine."""
+
+    def __init__(self, cfg: ChaosConfig = ChaosConfig()):
+        self.cfg = cfg
+        self._alloc = FailureInjector(tuple(cfg.deny_alloc_steps))
+        self._step = FailureInjector(tuple(cfg.fail_steps),
+                                     repeats=cfg.step_repeats)
+        self._restore = FailureInjector(tuple(cfg.fail_restore_steps),
+                                        repeats=cfg.restore_repeats)
+
+    @property
+    def counts(self) -> dict:
+        return {"alloc_denied": self._alloc.fired,
+                "step_failed": self._step.fired,
+                "restore_failed": self._restore.fired}
+
+    def deny_alloc(self, step: int) -> bool:
+        """True when this step's page allocation must report exhaustion."""
+        return self._alloc.should_fail(step)
+
+    def maybe_fail_step(self, step: int) -> None:
+        """Raise ``InjectedFailure`` ahead of the jitted mixed step."""
+        if self._step.should_fail(step):
+            raise InjectedFailure(f"injected step failure at engine step {step}")
+
+    def maybe_fail_restore(self, step: int) -> None:
+        """Raise ``InjectedFailure`` mid-restore of an offloaded request."""
+        if self._restore.should_fail(step):
+            raise InjectedFailure(
+                f"injected restore failure at engine step {step}")

@@ -21,36 +21,58 @@ The old monolithic path retraced per padded prompt-length bucket.
 
 Engine loop (one ``step()``):
 
-  1. **Admission** — FCFS from the waiting queue, gated on arrival step, a
-     free slot, and an all-or-nothing page reservation for the request's
-     whole lifetime.  Chunked mode resets the reserved pages to pristine
-     and parks the slot in the ``prefill`` phase with a ``prefill_pos``
-     cursor; monolithic mode (``EngineConfig.monolithic_prefill``, the A/B
-     baseline) runs the legacy per-length-bucket prefill inline.
-  2. **Token-budget scheduling** — each step spends at most
-     ``step_token_budget`` tokens: every decode-phase slot's token first,
-     then prefill chunks FCFS while whole chunks fit (at least one chunk is
-     granted when prefill work exists and nothing else would run, so the
-     engine never stalls).  This bounds per-step latency: long prompts cost
-     many small steps instead of one huge one.
-  3. **Mixed step** — one jitted call advances every granted lane.  Decode
-     slots append + sample greedily; prefill slots advance their cursor,
-     and the chunk that completes a prompt yields the request's first
-     token (TTFT) from the chunk-lane logits.
-  4. **Recycling** — slots hitting EOS / max-new-tokens free their pages
-     and return to the free list; the next ``step()`` re-admits.
+  1. **Load shedding** — when ``EngineConfig.max_waiting`` bounds the
+     waiting queue, overflow rejects the lowest-priority (newest among
+     ties) pending request as an explicitly *failed* ``FinishedRequest``
+     (``error="shed: ..."``) instead of growing the queue without bound.
+  2. **Admission** — ordered by ``(priority desc, arrival order)`` under
+     the SLO scheduler (``EngineConfig.scheduler="slo"``; ``"fcfs"`` is
+     the PR 5 baseline), gated on arrival step, a free slot, and an
+     all-or-nothing page reservation for the request's whole lifetime.
+     When a high-priority request is slot- or memory-blocked, admission
+     may **preempt** a strictly-lower-priority running request: the
+     victim's pages (K/V + kg/vm selection summaries) are gathered to a
+     host snapshot (``runtime/offload.py``), its device pages are evicted
+     back to the allocator, and it re-admits later by scattering the
+     snapshot into freshly allocated pages **bit-identically** — a page
+     carries its own selection summaries, so re-admission needs *zero*
+     prefill recompute and adds zero traces.
+  3. **Token-budget scheduling** — each step spends at most
+     ``step_token_budget`` tokens.  Decode tokens go first, ordered by
+     ``(priority, SLO headroom, least-recently-served)`` (FCFS: admission
+     order); decodes beyond the budget are deferred to later steps.  Then
+     whole prefill chunks fill the remaining budget in the same priority
+     order.  When decode-lane TPOT pressure is high (a decode was deferred
+     or a TPOT SLO is being violated) the chunk grant is adaptively capped
+     at one lane; a prefill-phase slot that has gone ``chunk_starve_steps``
+     engine steps without any chunk grant receives one anyway (bounded
+     overdraft — decode saturation cannot starve prefill forever).
+  4. **Mixed step** — one jitted call advances every granted lane, wrapped
+     in the failure boundary: an injected/step exception *before* any pool
+     mutation is retried up to ``max_step_retries`` times, after which the
+     engine degrades by aborting its lowest-priority active request (a
+     failed ``FinishedRequest``, never a crashed engine) and retrying with
+     the smaller batch.  ``StragglerMonitor`` times every working step;
+     flagged outliers surface in ``engine.metrics``.
+  5. **Recycling** — slots hitting EOS / max-new-tokens free their pages
+     and return to the free list; the next ``step()`` re-admits.  Page
+     accounting is asserted (``PageAllocator.check_conservation``) after
+     every recovery path: no orphaned pages, no double bookkeeping.
 
 Latency accounting: ``token_latencies_s`` records **inter-token gaps** as
 experienced by the request (time between consecutive emissions — this is
-what surfaces head-of-line blocking stalls), ``ttft_s`` the admission ->
-first-token wall, and ``tpot_s`` the mean per-output-token time after the
-first.  ``benchmarks/serving.py`` reports them separately.
+what surfaces head-of-line blocking *and* swapped-out time), ``ttft_s``
+the admission -> first-token wall, and ``tpot_s`` the mean per-output-token
+time after the first.  ``benchmarks/serving.py`` reports them separately,
+split by priority class in the overload study (``BENCH_slo.json``).
 
 Determinism / batch-invariance: every per-slot computation in both lanes
 is row-parallel (selection, gather, softmax), and chunk boundaries depend
 only on ``chunk_size`` — so a request's token stream is bitwise independent
-of which slot it occupies, who its co-tenants are, and how the token budget
-interleaves its chunks.  ``tests/test_engine.py`` pins this differentially.
+of which slot it occupies, who its co-tenants are, how the token budget
+interleaves its chunks, and whether it was preempted and restored along
+the way.  ``tests/test_engine.py`` and ``tests/test_preemption.py`` pin
+this differentially.
 """
 from __future__ import annotations
 
@@ -66,16 +88,42 @@ import numpy as np
 from repro.core import chunked as chunked_lib
 from repro.launch import steps as steps_lib
 from repro.models import transformer
+from repro.runtime import offload as offload_lib
 from repro.runtime import paged as paged_lib
+from repro.runtime.fault_tolerance import InjectedFailure
+from repro.runtime.straggler import StragglerMonitor
+
+
+class EngineStalledError(RuntimeError):
+    """``StemEngine.run`` hit its step cap with requests still in flight.
+
+    Carries the stuck uids so the operator can see *what* is wedged
+    (running / waiting / preempted) instead of a silent partial result."""
+
+    def __init__(self, max_steps: int, running: list, waiting: list,
+                 preempted: list):
+        self.running, self.waiting, self.preempted = running, waiting, preempted
+        super().__init__(
+            f"engine stalled: {max_steps} steps without draining; stuck "
+            f"requests: running uids {running}, waiting uids {waiting}, "
+            f"preempted uids {preempted}")
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request."""
+    """One generation request.
+
+    ``priority``: higher wins admission, decode-token grants, and may
+    preempt strictly-lower-priority running requests (SLO scheduler only).
+    ``ttft_slo_s`` / ``tpot_slo_s``: optional latency targets; the
+    scheduler orders equal-priority work by remaining SLO headroom."""
     uid: int
     prompt: np.ndarray            # (prompt_len,) int32 token ids
     max_new_tokens: int
     arrival_step: int = 0         # engine step at which the request exists
+    priority: int = 0
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -86,10 +134,15 @@ class FinishedRequest:
     slot: int
     admitted_step: int
     finished_step: int
-    ttft_s: float                 # admission -> first token (all chunks)
+    ttft_s: float                 # arrival -> first token (queueing included)
     tpot_s: float                 # mean per-output-token time after the
                                   # first (NaN when only one token: undefined)
-    token_latencies_s: list       # inter-token gaps (includes HOL stalls)
+    token_latencies_s: list       # inter-token gaps (includes HOL stalls
+                                  # and swapped-out time while preempted)
+    priority: int = 0
+    preemptions: int = 0          # times swapped out to host and restored
+    queue_s: float = 0.0          # arrival -> admission wait (in ttft_s too)
+    error: Optional[str] = None   # None = finished; else shed/abort reason
 
 
 def pages_needed(prompt_len: int, max_new: int, page_size: int) -> int:
@@ -115,7 +168,30 @@ class EngineConfig:
     one step may spend — decode tokens first, then whole prefill chunks.
     ``monolithic_prefill`` switches to the legacy per-length-trace
     admission prefill (the chunked-vs-monolithic A/B baseline, and the
-    fallback for threshold selectors chunked prefill cannot serve)."""
+    fallback for threshold selectors chunked prefill cannot serve).
+
+    Overload-resilience knobs:
+      ``scheduler``          "slo" (priority + SLO-headroom ordering,
+                             preemption-capable) or "fcfs" (the PR 5
+                             baseline: admission order everywhere, no
+                             preemption).  With every request at the
+                             default priority and no SLOs, "slo" degrades
+                             to exactly "fcfs".
+      ``preemption``         allow admission to evict strictly-lower-
+                             priority running requests to host memory.
+      ``max_waiting``        waiting-queue bound; overflow sheds the
+                             lowest-priority pending request as a failed
+                             FinishedRequest (None = unbounded).
+      ``max_step_retries``   bounded retry of a failed mixed step before
+                             degrading (abort lowest-priority active).
+      ``max_restore_retries``retries of a failed offload-restore before
+                             the request is aborted with an error.
+      ``chunk_starve_steps`` max engine steps a waiting prefill can go
+                             without any chunk grant before one is forced
+                             (budget overdraft; liveness under decode
+                             saturation).
+      ``straggler_threshold``step-time outlier factor for the wired-in
+                             StragglerMonitor (``engine.metrics``)."""
     max_slots: int = 4
     num_pages: int = 64
     max_pages_per_slot: int = 16
@@ -124,6 +200,18 @@ class EngineConfig:
     chunk_size: Optional[int] = None
     step_token_budget: Optional[int] = None
     monolithic_prefill: bool = False
+    scheduler: str = "slo"
+    preemption: bool = True
+    max_waiting: Optional[int] = None
+    max_step_retries: int = 2
+    max_restore_retries: int = 2
+    chunk_starve_steps: int = 4
+    straggler_threshold: float = 3.0
+
+    def __post_init__(self):
+        if self.scheduler not in ("slo", "fcfs"):
+            raise ValueError(f"unknown scheduler {self.scheduler!r} "
+                             "(expected 'slo' or 'fcfs')")
 
     @classmethod
     def for_trace(cls, *, max_slots: int, max_prompt: int,
@@ -132,15 +220,17 @@ class EngineConfig:
                   eos_id: Optional[int] = None,
                   chunk_size: Optional[int] = None,
                   step_token_budget: Optional[int] = None,
-                  monolithic_prefill: bool = False) -> "EngineConfig":
+                  monolithic_prefill: bool = False,
+                  **knobs) -> "EngineConfig":
         """Size the pool so every slot can hold the largest trace request —
-        the one place the reservation rule is encoded for drivers."""
+        the one place the reservation rule is encoded for drivers.  Extra
+        ``knobs`` pass through to the config (scheduler, max_waiting, ...)."""
         per_slot = pages_needed(max_prompt, max_new_tokens, page_size)
         return cls(max_slots=max_slots, num_pages=1 + max_slots * per_slot,
                    max_pages_per_slot=per_slot, budget_frac=budget_frac,
                    eos_id=eos_id, chunk_size=chunk_size,
                    step_token_budget=step_token_budget,
-                   monolithic_prefill=monolithic_prefill)
+                   monolithic_prefill=monolithic_prefill, **knobs)
 
 
 @dataclasses.dataclass
@@ -149,6 +239,7 @@ class _SlotState:
     tokens: list
     admitted_step: int
     admit_t: float
+    arrival_t: float              # when the request became schedulable
     phase: str                    # "prefill" | "decode"
     prefill_pos: int              # next absolute prompt position to process
     padded: np.ndarray            # (Lp,) prompt right-padded to a page multiple
@@ -157,6 +248,19 @@ class _SlotState:
     first_token_t: float = 0.0
     last_token_t: float = 0.0
     token_latencies_s: list = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+    last_sched_step: int = 0      # last step granted a decode token
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """A swapped-out request: slot state frozen, pages on the host."""
+    st: _SlotState
+    npages: int                   # device pages to re-reserve
+    cache_len: int                # cache_lens value at preemption
+    seq: int                      # original submission order
+    preempt_step: int
+    restore_attempts: int = 0
 
 
 class StemEngine:
@@ -165,10 +269,16 @@ class StemEngine:
     ``stem_cfg`` names the engine's sparsity policy: a ``SparsityPolicy``,
     a registered policy name (``"stem"``, ``"streaming"``, …) or a legacy
     ``StemConfig``.  One policy drives chunked prefill page summaries,
-    chunk selection, and decode page selection alike."""
+    chunk selection, and decode page selection alike.
+
+    ``chaos`` (a ``runtime.chaos.ChaosInjector``) optionally injects
+    allocator exhaustion, step failures, and restore failures at configured
+    engine steps — the engine must survive all of them (bounded retry,
+    per-request abort-with-error, load shedding), which
+    ``tests/test_chaos.py`` asserts."""
 
     def __init__(self, bundle, params, stem_cfg,
-                 ecfg: EngineConfig = EngineConfig()):
+                 ecfg: EngineConfig = EngineConfig(), chaos=None):
         from repro.core import policy as policy_lib
 
         transformer.assert_paged_servable(bundle.cfg)
@@ -178,6 +288,7 @@ class StemEngine:
         self.policy = policy_lib.as_policy(stem_cfg)
         self.stem_cfg = self.policy          # legacy attribute name
         self.ecfg = ecfg
+        self.chaos = chaos
         self.page_size = self.policy.block_size
         self.chunk_size = ecfg.chunk_size or 2 * self.page_size
         if self.chunk_size % self.page_size:
@@ -202,13 +313,29 @@ class StemEngine:
         self.slot_pages: list = [None] * S     # page ids held by each slot
         self.slots: list = [None] * S          # _SlotState | None
         self.waiting: collections.deque = collections.deque()
+        self.preempted: list = []              # _Preempted records
         self.finished: list = []
+        self.host_store = offload_lib.HostPageStore()
         self.step_count = 0
         self.stats = {"prefills": 0, "chunks": 0, "decode_steps": 0,
                       "step_calls": 0, "tokens_generated": 0,
                       "slots_reused": 0, "max_concurrency": 0,
-                      "traces": 0, "prefill_traces": 0}
+                      "traces": 0, "prefill_traces": 0,
+                      "preemptions": 0, "restores": 0, "restore_failures": 0,
+                      "step_failures": 0, "aborts": 0, "shed": 0,
+                      "decode_deferrals": 0, "chunk_caps": 0,
+                      "starvation_grants": 0, "alloc_denials": 0,
+                      "straggler_steps": 0}
         self._slot_ever_used = [False] * S
+        self._seq: dict = {}                   # uid -> submission order
+        self._arrival_t: dict = {}             # uid -> first-schedulable wall
+        self._next_seq = 0
+        self._last_chunk_step = 0              # last step a chunk ran (or no
+                                               # prefill work existed)
+        self.monitor = StragglerMonitor(
+            threshold=ecfg.straggler_threshold,
+            on_straggler=lambda s, dt, ema: self.stats.__setitem__(
+                "straggler_steps", self.stats["straggler_steps"] + 1))
 
         def _count(key):
             def bump():
@@ -221,7 +348,9 @@ class StemEngine:
         # cost tracks the policy's budget, not the page-table width.
         # ``stats["traces"]`` counts (re)compiles via a trace-time side
         # effect — the regression test pins it to the two lane signatures
-        # (mixed / decode-only) across heterogeneous prompt lengths.
+        # (mixed / decode-only) across heterogeneous prompt lengths;
+        # preemption's extract/restore are their own jits and never touch
+        # this counter.
         k_bound = (0 if ecfg.monolithic_prefill else
                    chunked_lib.chunk_budget_bound(self.policy, P))
         self._unified = jax.jit(steps_lib.make_unified_step(
@@ -230,6 +359,9 @@ class StemEngine:
             donate_argnums=(1,))
         self._reset = jax.jit(paged_lib.reset_pools_stacked,
                               donate_argnums=(0,))
+        self._extract = jax.jit(steps_lib.make_page_extract())
+        self._restore_pages = jax.jit(steps_lib.make_page_restore(),
+                                      donate_argnums=(0,))
         self._prefill = None
         if ecfg.monolithic_prefill:
             # Legacy A/B arm: one trace per padded prompt-length bucket.
@@ -245,6 +377,10 @@ class StemEngine:
             raise ValueError(
                 f"request {req.uid} needs {npages} pages > max_pages_per_slot "
                 f"{self.ecfg.max_pages_per_slot}")
+        if req.uid in self._seq:
+            raise ValueError(f"duplicate request uid {req.uid}")
+        self._seq[req.uid] = self._next_seq
+        self._next_seq += 1
         self.waiting.append(req)
 
     def _pages_needed(self, prompt_len: int, max_new: int) -> int:
@@ -252,15 +388,32 @@ class StemEngine:
 
     def reset_metrics(self) -> None:
         """Zero the workload observability state (finished list, counters,
-        slot-reuse tracking) without touching pools, slots, or the
-        allocator — e.g. after a benchmark warmup pass.  Trace counters are
-        *kept*: they record compiles over the engine's lifetime (a warmed
-        engine adds zero), and benchmarks report them as evidence of the
-        no-retrace property."""
+        slot-reuse tracking, straggler flags) without touching pools, slots,
+        or the allocator — e.g. after a benchmark warmup pass.  Trace
+        counters are *kept*: they record compiles over the engine's lifetime
+        (a warmed engine adds zero), and benchmarks report them as evidence
+        of the no-retrace property.  The straggler EMA is kept warm too —
+        only its flag history resets."""
         self.finished.clear()
         keep = ("traces", "prefill_traces")
         self.stats.update({k: 0 for k in self.stats if k not in keep})
         self._slot_ever_used = [False] * self.ecfg.max_slots
+        self.monitor.flagged.clear()
+
+    @property
+    def metrics(self) -> dict:
+        """Live observability: straggler flags, offload residency, chaos
+        counters — the serving-side mirror of ``stats`` for dashboards."""
+        return {
+            "step_time_ema_s": self.monitor.ema,
+            "straggler_steps": list(self.monitor.flagged),
+            "offloaded_requests": len(self.preempted),
+            "offload_resident_bytes": self.host_store.nbytes,
+            "offload_peak_bytes": self.host_store.peak_nbytes,
+            "allocator_evictions": self.allocator.evictions,
+            "allocator_restores": self.allocator.restores,
+            "chaos": self.chaos.counts if self.chaos else None,
+        }
 
     def _free_slot(self) -> Optional[int]:
         for s, st in enumerate(self.slots):
@@ -268,70 +421,290 @@ class StemEngine:
                 return s
         return None
 
+    def _check_pages(self) -> None:
+        """Free-list conservation after any path that moves pages: every
+        page is exactly one of {free, held by a slot}; offloaded requests
+        hold none."""
+        held = [p for pages in self.slot_pages if pages for p in pages]
+        self.allocator.check_conservation(held)
+
+    # -- preemption + host offload ------------------------------------------
+
+    def preempt(self, slot: int) -> None:
+        """Swap a running request out to host memory: gather its pages
+        (K/V + kg/vm summaries) into a host snapshot, evict the device
+        pages, and park the frozen slot state on the preempted list.
+        Re-admission restores bit-identically with zero recompute."""
+        st = self.slots[slot]
+        if st is None:
+            raise ValueError(f"slot {slot} is not active")
+        pages = self.slot_pages[slot]
+        row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
+        row[:len(pages)] = pages
+        snap = self._extract(self.pools, jnp.asarray(row))
+        self.host_store.put(st.req.uid, snap)
+        st.preemptions += 1
+        self.preempted.append(_Preempted(
+            st=st, npages=len(pages), cache_len=int(self.cache_lens[slot]),
+            seq=self._seq[st.req.uid], preempt_step=self.step_count))
+        self.allocator.evict(pages)
+        self.page_table[slot] = 0
+        self.cache_lens[slot] = 0
+        self.slot_pages[slot] = None
+        self.slots[slot] = None
+        self.stats["preemptions"] += 1
+        self._check_pages()
+
+    def _admit_restore(self, rec: _Preempted, slot: int, pages: list) -> bool:
+        """Swap a preempted request back in.  On an injected restore
+        failure: free the fresh pages (conservation), keep the snapshot,
+        retry on a later step — or abort the request with an explicit
+        error once ``max_restore_retries`` is exhausted."""
+        row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
+        row[:rec.npages] = pages
+        try:
+            if self.chaos:
+                self.chaos.maybe_fail_restore(self.step_count)
+        except InjectedFailure as e:
+            self.allocator.free(pages)
+            rec.restore_attempts += 1
+            self.stats["restore_failures"] += 1
+            if rec.restore_attempts > self.ecfg.max_restore_retries:
+                self.host_store.drop(rec.st.req.uid)
+                self.stats["aborts"] += 1
+                self._finish_with_error(
+                    rec.st, slot=-1,
+                    error=f"aborted: restore failed "
+                          f"{rec.restore_attempts} times ({e})")
+            else:
+                self.preempted.append(rec)
+            self._check_pages()
+            return False
+        snap = self.host_store.pop(rec.st.req.uid)
+        self.pools = self._restore_pages(self.pools, jnp.asarray(row), snap)
+        if self._slot_ever_used[slot]:
+            self.stats["slots_reused"] += 1
+        self._slot_ever_used[slot] = True
+        self.page_table[slot] = row
+        self.cache_lens[slot] = rec.cache_len
+        self.slot_pages[slot] = pages
+        self.slots[slot] = rec.st
+        self.stats["restores"] += 1
+        self._check_pages()
+        return True
+
+    def _try_preempt_for(self, priority: int, need_pages: int) -> bool:
+        """Preempt one strictly-lower-priority running request to make room
+        (a slot and/or pages) for an admission at ``priority``.  Refuses
+        when evicting every eligible victim still could not free enough
+        pages — no pointless offloads."""
+        if (self.ecfg.scheduler != "slo" or not self.ecfg.preemption):
+            return False
+        victims = [s for s, st in enumerate(self.slots)
+                   if st is not None and st.req.priority < priority]
+        if not victims:
+            return False
+        reclaimable = sum(len(self.slot_pages[s]) for s in victims)
+        if self.allocator.available + reclaimable < need_pages:
+            return False
+        # Lowest priority loses first; among equals, the most recently
+        # admitted (least sunk progress time).
+        victim = min(victims, key=lambda s: (self.slots[s].req.priority,
+                                             -self.slots[s].admitted_step, -s))
+        self.preempt(victim)
+        return True
+
+    # -- failure paths ------------------------------------------------------
+
+    def _finish_with_error(self, st: _SlotState, slot: int, error: str) -> None:
+        tpot = (float("nan") if len(st.tokens) < 2 else
+                (st.last_token_t - st.first_token_t) / (len(st.tokens) - 1))
+        self.finished.append(FinishedRequest(
+            uid=st.req.uid, prompt_len=len(st.req.prompt), tokens=st.tokens,
+            slot=slot, admitted_step=st.admitted_step,
+            finished_step=self.step_count,
+            ttft_s=st.ttft_s if st.tokens else float("nan"), tpot_s=tpot,
+            token_latencies_s=st.token_latencies_s,
+            priority=st.req.priority, preemptions=st.preemptions,
+            queue_s=st.admit_t - st.arrival_t, error=error))
+
+    def _abort(self, slot: int, error: str) -> None:
+        """Terminate an active request with an explicit error; its pages go
+        back to the free list and the slot frees up."""
+        st = self.slots[slot]
+        self._finish_with_error(st, slot, error)
+        self.allocator.free(self.slot_pages[slot])
+        self.page_table[slot] = 0
+        self.cache_lens[slot] = 0
+        self.slot_pages[slot] = None
+        self.slots[slot] = None
+        self.stats["aborts"] += 1
+        self._check_pages()
+
+    def _shed(self) -> None:
+        """Bound the waiting queue: overflow rejects the lowest-priority
+        (newest among ties; FCFS: the newest, period) pending request as an
+        explicitly failed FinishedRequest."""
+        lim = self.ecfg.max_waiting
+        if lim is None:
+            return
+        while len(self.waiting) > lim:
+            if self.ecfg.scheduler == "fcfs":
+                i = len(self.waiting) - 1
+            else:
+                i = min(range(len(self.waiting)),
+                        key=lambda j: (self.waiting[j].priority,
+                                       -self._seq[self.waiting[j].uid]))
+            req = self.waiting[i]
+            del self.waiting[i]
+            self.finished.append(FinishedRequest(
+                uid=req.uid, prompt_len=len(req.prompt), tokens=[], slot=-1,
+                admitted_step=-1, finished_step=self.step_count,
+                ttft_s=float("nan"), tpot_s=float("nan"),
+                token_latencies_s=[], priority=req.priority,
+                error=f"shed: waiting queue exceeded max_waiting={lim}"))
+            self.stats["shed"] += 1
+
+    def _lowest_priority_active(self) -> Optional[int]:
+        active = [s for s, st in enumerate(self.slots) if st is not None]
+        if not active:
+            return None
+        return min(active, key=lambda s: (self.slots[s].req.priority,
+                                          -self.slots[s].admitted_step, -s))
+
+    def _try_alloc(self, n: int, restore: bool = False):
+        """(pages | None, chaos_denied).  An injected denial models
+        transient allocator exhaustion: the admission blocks this step and
+        retries on the next — it must never trigger preemption."""
+        if self.chaos and self.chaos.deny_alloc(self.step_count):
+            self.stats["alloc_denials"] += 1
+            return None, True
+        pages = (self.allocator.restore(n) if restore
+                 else self.allocator.alloc(n))
+        return pages, False
+
     # -- engine iteration ---------------------------------------------------
 
-    def _admit(self) -> None:
-        while self.waiting:
-            req = self.waiting[0]
+    def _next_candidate(self):
+        """Head-of-line admission candidate, or None.  FCFS: strictly the
+        waiting head.  SLO: the best of (preempted + *arrived* waiting) by
+        (priority desc, submission order) — re-admissions compete with
+        fresh work on equal terms, and admission never skips past a better
+        candidate that is blocked (no priority inversion via bypass)."""
+        if self.ecfg.scheduler == "fcfs":
+            if self.waiting and self.waiting[0].arrival_step <= self.step_count:
+                return ("new", 0)
+            return None
+        best, best_key = None, None
+        for i, rec in enumerate(self.preempted):
+            key = (-rec.st.req.priority, rec.seq)
+            if best_key is None or key < best_key:
+                best, best_key = ("pre", i), key
+        for i, req in enumerate(self.waiting):
             if req.arrival_step > self.step_count:
-                break                           # not arrived yet (FCFS gate)
+                continue
+            key = (-req.priority, self._seq[req.uid])
+            if best_key is None or key < best_key:
+                best, best_key = ("new", i), key
+        return best
+
+    def _admit(self) -> None:
+        # Admit first, shed after: the queue bound applies to what remains
+        # waiting once this step's capacity is used — never to a request a
+        # free slot could serve right now.
+        self._admit_loop()
+        self._shed()
+
+    def _admit_loop(self) -> None:
+        while True:
+            cand = self._next_candidate()
+            if cand is None:
+                return
+            kind, idx = cand
+            if kind == "new":
+                req = self.waiting[idx]
+                prio = req.priority
+                npages = self._pages_needed(len(req.prompt),
+                                            req.max_new_tokens)
+            else:
+                rec = self.preempted[idx]
+                prio = rec.st.req.priority
+                npages = rec.npages
             slot = self._free_slot()
             if slot is None:
-                break
-            npages = self._pages_needed(len(req.prompt), req.max_new_tokens)
-            pages = self.allocator.alloc(npages)
-            if pages is None:
-                break                           # no memory — head-of-line waits
-            self.waiting.popleft()
-
-            plen = len(req.prompt)
-            npages_prompt = -(-plen // self.page_size)
-            padded_len = npages_prompt * self.page_size
-            # Full reservation, trash-padded.
-            row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
-            row[:npages] = pages
-            if self._slot_ever_used[slot]:
-                self.stats["slots_reused"] += 1
-            self._slot_ever_used[slot] = True
-            self.page_table[slot] = row
-            self.slot_pages[slot] = pages
-            now = time.perf_counter()
-
-            if self.ecfg.monolithic_prefill:
-                # Legacy: prefill the whole prompt at admission (resets the
-                # reserved pages inside prefill_kv_pages), per-length trace.
-                toks = np.zeros((1, padded_len), np.int32)
-                toks[0, :plen] = req.prompt
-                logits, self.pools = self._prefill(
-                    self.params, jnp.asarray(toks),
-                    jnp.asarray(plen, jnp.int32), self.pools,
-                    jnp.asarray(row))
-                first = int(np.argmax(np.asarray(logits)))
-                done = time.perf_counter()
-                self.stats["prefills"] += 1
-                self.stats["tokens_generated"] += 1
-                self.cache_lens[slot] = plen
-                st = _SlotState(
-                    req=req, tokens=[first], admitted_step=self.step_count,
-                    admit_t=now, phase="decode", prefill_pos=padded_len,
-                    padded=np.zeros((0,), np.int32), true_len=plen,
-                    ttft_s=done - now, first_token_t=done, last_token_t=done)
-                self.slots[slot] = st
-                if self._is_finished(st):
-                    self._recycle(slot)
+                if not self._try_preempt_for(prio, npages):
+                    return                  # slot-blocked — head-of-line waits
+                slot = self._free_slot()
+            pages, denied = self._try_alloc(npages, restore=(kind == "pre"))
+            if denied:
+                return                      # transient exhaustion — retry later
+            while pages is None:
+                if not self._try_preempt_for(prio, npages):
+                    return                  # memory-blocked — head-of-line waits
+                pages, denied = self._try_alloc(npages, restore=(kind == "pre"))
+                if denied:
+                    return
+            if kind == "pre":
+                del self.preempted[idx]
+                if not self._admit_restore(rec, slot, pages):
+                    return                  # restore failed — handled inside
                 continue
+            del self.waiting[idx]
+            self._admit_new(req, slot, pages)
 
-            # Chunked: reset the reservation to pristine (recycled pages are
-            # dirty; chunk writes + decode increments assume fresh pages),
-            # park the slot mid-prefill with a prefill_pos cursor.
-            self.pools = self._reset(self.pools, jnp.asarray(row))
-            ptoks = np.zeros((padded_len,), np.int32)
-            ptoks[:plen] = req.prompt
-            self.cache_lens[slot] = 0
-            self.slots[slot] = _SlotState(
-                req=req, tokens=[], admitted_step=self.step_count,
-                admit_t=now, phase="prefill", prefill_pos=0, padded=ptoks,
-                true_len=plen)
+    def _admit_new(self, req: Request, slot: int, pages: list) -> None:
+        plen = len(req.prompt)
+        npages = len(pages)
+        npages_prompt = -(-plen // self.page_size)
+        padded_len = npages_prompt * self.page_size
+        # Full reservation, trash-padded.
+        row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
+        row[:npages] = pages
+        if self._slot_ever_used[slot]:
+            self.stats["slots_reused"] += 1
+        self._slot_ever_used[slot] = True
+        self.page_table[slot] = row
+        self.slot_pages[slot] = pages
+        now = time.perf_counter()
+        arrival = self._arrival_t.get(req.uid, now)
+
+        if self.ecfg.monolithic_prefill:
+            # Legacy: prefill the whole prompt at admission (resets the
+            # reserved pages inside prefill_kv_pages), per-length trace.
+            toks = np.zeros((1, padded_len), np.int32)
+            toks[0, :plen] = req.prompt
+            logits, self.pools = self._prefill(
+                self.params, jnp.asarray(toks),
+                jnp.asarray(plen, jnp.int32), self.pools,
+                jnp.asarray(row))
+            first = int(np.argmax(np.asarray(logits)))
+            done = time.perf_counter()
+            self.stats["prefills"] += 1
+            self.stats["tokens_generated"] += 1
+            self.cache_lens[slot] = plen
+            st = _SlotState(
+                req=req, tokens=[first], admitted_step=self.step_count,
+                admit_t=now, arrival_t=arrival, phase="decode",
+                prefill_pos=padded_len,
+                padded=np.zeros((0,), np.int32), true_len=plen,
+                ttft_s=done - arrival, first_token_t=done, last_token_t=done,
+                last_sched_step=self.step_count)
+            self.slots[slot] = st
+            if self._is_finished(st):
+                self._recycle(slot)
+            return
+
+        # Chunked: reset the reservation to pristine (recycled pages are
+        # dirty; chunk writes + decode increments assume fresh pages),
+        # park the slot mid-prefill with a prefill_pos cursor.
+        self.pools = self._reset(self.pools, jnp.asarray(row))
+        ptoks = np.zeros((padded_len,), np.int32)
+        ptoks[:plen] = req.prompt
+        self.cache_lens[slot] = 0
+        self.slots[slot] = _SlotState(
+            req=req, tokens=[], admitted_step=self.step_count,
+            admit_t=now, arrival_t=arrival, phase="prefill", prefill_pos=0,
+            padded=ptoks, true_len=plen, last_sched_step=self.step_count)
 
     def _is_finished(self, st: _SlotState) -> bool:
         if len(st.tokens) >= st.req.max_new_tokens:
@@ -348,37 +721,102 @@ class StemEngine:
             uid=st.req.uid, prompt_len=len(st.req.prompt), tokens=st.tokens,
             slot=slot, admitted_step=st.admitted_step,
             finished_step=self.step_count, ttft_s=st.ttft_s, tpot_s=tpot,
-            token_latencies_s=st.token_latencies_s))
+            token_latencies_s=st.token_latencies_s,
+            priority=st.req.priority, preemptions=st.preemptions,
+            queue_s=st.admit_t - st.arrival_t))
         self.allocator.free(self.slot_pages[slot])
         self.page_table[slot] = 0
         self.cache_lens[slot] = 0
         self.slot_pages[slot] = None
         self.slots[slot] = None
 
-    def _mixed_step(self) -> None:
-        """One unified-step invocation: every decode-phase slot's token plus
-        as many prefill chunks as the token budget admits."""
-        dec = [s for s, st in enumerate(self.slots)
-               if st is not None and st.phase == "decode"]
+    def _decode_key(self, s: int, now: float):
+        """Decode-token grant order.  SLO: priority first, then remaining
+        TPOT headroom (violators and near-deadline slots first; no-SLO
+        slots last within the tier), then least-recently-served for
+        round-robin fairness under budget pressure."""
+        st = self.slots[s]
+        if self.ecfg.scheduler == "fcfs":
+            return (0, 0.0, st.admitted_step, s)
+        slo = st.req.tpot_slo_s
+        headroom = (slo - (now - st.last_token_t)) if slo else float("inf")
+        return (-st.req.priority, headroom, st.last_sched_step, s)
+
+    def _chunk_key(self, s: int, now: float):
+        """Chunk grant order: priority, then remaining TTFT headroom."""
+        st = self.slots[s]
+        if self.ecfg.scheduler == "fcfs":
+            return (0, 0.0, st.admitted_step, s)
+        slo = st.req.ttft_slo_s
+        headroom = (slo - (now - st.arrival_t)) if slo else float("inf")
+        return (-st.req.priority, headroom, st.admitted_step, s)
+
+    def _mixed_step(self) -> bool:
+        """One unified-step invocation: the scheduled decode tokens plus as
+        many prefill chunks as the token budget admits.  Returns whether
+        any work ran (for straggler timing)."""
+        dec_all = [s for s, st in enumerate(self.slots)
+                   if st is not None and st.phase == "decode"]
         pre = [s for s, st in enumerate(self.slots)
                if st is not None and st.phase == "prefill"]
-        if not dec and not pre:
-            return
+        if not dec_all and not pre:
+            self._last_chunk_step = self.step_count
+            return False
+        # Injection point: strictly BEFORE any pool mutation, so a bounded
+        # retry of this step never double-applies summary increments.
+        if self.chaos:
+            self.chaos.maybe_fail_step(self.step_count)
         self.stats["max_concurrency"] = max(self.stats["max_concurrency"],
-                                            len(dec) + len(pre))
+                                            len(dec_all) + len(pre))
+        sched_now = time.perf_counter()
 
-        # Token budget: decode tokens first, then whole chunks FCFS into the
-        # static chunk lanes.  Always grant at least one chunk when prefill
-        # work exists and no decode token would otherwise run (liveness).
+        # Token budget: decode tokens first — ordered by (priority, SLO
+        # headroom, least-recently-served); FCFS: admission order — with
+        # decodes beyond the budget deferred to later steps.
+        cap = max(1, self.token_budget)
+        dec_all.sort(key=lambda s: self._decode_key(s, sched_now))
+        dec = dec_all[:cap]
+        deferred = dec_all[cap:]
+        self.stats["decode_deferrals"] += len(deferred)
+
+        # Adaptive chunk sizing: under decode-lane TPOT pressure (a decode
+        # was deferred, or a TPOT SLO is currently violated) cap the chunk
+        # grant at one lane — prefill yields to the decode SLOs.
+        pressure = False
+        if self.ecfg.scheduler == "slo":
+            violating = any(
+                self.slots[s].req.tpot_slo_s is not None
+                and sched_now - self.slots[s].last_token_t
+                    > self.slots[s].req.tpot_slo_s
+                for s in dec_all)
+            pressure = bool(deferred) or violating
+        lanes_cap = 1 if pressure else self.chunk_lanes
+        if pressure and pre and lanes_cap < self.chunk_lanes:
+            self.stats["chunk_caps"] += 1
+
+        # Whole chunks into the static chunk lanes, priority/TTFT-headroom
+        # order (FCFS: admission order).  Always grant at least one chunk
+        # when prefill work exists and nothing else would run, and force
+        # one when prefill has starved ``chunk_starve_steps`` steps — the
+        # bounded overdraft that keeps decode saturation from starving
+        # prefill forever.
         C = self.chunk_size
         remaining = self.token_budget - len(dec)
+        pre.sort(key=lambda s: self._chunk_key(s, sched_now))
         grant = []
-        for s in sorted(pre, key=lambda s: (self.slots[s].admitted_step, s)):
-            if len(grant) >= self.chunk_lanes:
+        for s in pre:
+            if len(grant) >= lanes_cap:
                 break
             if remaining >= C or (not grant and not dec):
                 grant.append(s)
                 remaining -= C
+        if (not grant and pre and
+                self.step_count - self._last_chunk_step
+                >= self.ecfg.chunk_starve_steps):
+            grant = [pre[0]]
+            self.stats["starvation_grants"] += 1
+        if grant or not pre:
+            self._last_chunk_step = self.step_count
 
         S, P = self.ecfg.max_slots, self.ecfg.max_pages_per_slot
         tokens = np.zeros((S, 1), np.int32)
@@ -388,6 +826,7 @@ class StemEngine:
             tokens[s, 0] = self.slots[s].tokens[-1]
             dec_table[s] = self.page_table[s]
             dec_lens[s] = self.cache_lens[s]
+            self.slots[s].last_sched_step = self.step_count
 
         chunk = None
         if grant:
@@ -453,29 +892,76 @@ class StemEngine:
                 st.phase = "decode"
                 self.cache_lens[s] = st.true_len
                 st.first_token_t = st.last_token_t = now
-                st.ttft_s = now - st.admit_t
+                st.ttft_s = now - st.arrival_t
                 self.stats["prefills"] += 1
                 self.stats["tokens_generated"] += 1
                 if self._is_finished(st):
                     self._recycle(s)
+        return True
+
+    def _guarded_step(self) -> None:
+        """The failure boundary around the mixed step: bounded retry of a
+        failed step (injection precedes pool mutation, so retry is sound),
+        then graceful degradation — abort the lowest-priority active
+        request and retry with the smaller batch.  Working steps are timed
+        by the StragglerMonitor; failed/idle ones don't pollute its EMA."""
+        retries = 0
+        while True:
+            self.monitor.start()
+            try:
+                did_work = self._mixed_step()
+            except InjectedFailure as e:
+                self.monitor.cancel()
+                self.stats["step_failures"] += 1
+                retries += 1
+                if retries > self.ecfg.max_step_retries:
+                    victim = self._lowest_priority_active()
+                    if victim is None:
+                        raise
+                    self._abort(victim,
+                                f"aborted: step failed {retries} times ({e})")
+                    retries = 0
+                continue
+            if did_work:
+                self.monitor.stop(self.step_count)
+            else:
+                self.monitor.cancel()
+            return
 
     def step(self) -> None:
-        """One engine iteration: admit, one mixed batched step, recycle."""
+        """One engine iteration: admit (with preemption) + shed, one guarded
+        mixed batched step, recycle."""
+        # Stamp arrival wall time the first step each request is
+        # schedulable — TTFT and TTFT-SLO headroom count queueing time, so
+        # a scheduler cannot hide latency in the waiting queue.
+        now = time.perf_counter()
+        for r in self.waiting:
+            if r.arrival_step <= self.step_count and r.uid not in self._arrival_t:
+                self._arrival_t[r.uid] = now
         self._admit()
-        self._mixed_step()
+        self._guarded_step()
         self.step_count += 1
 
     @property
     def pending(self) -> int:
-        return len(self.waiting) + sum(st is not None for st in self.slots)
+        return (len(self.waiting) + len(self.preempted)
+                + sum(st is not None for st in self.slots))
 
     def run(self, requests=(), max_steps: int = 100_000) -> list:
         """Drive submitted (+ given) requests to completion; returns
-        FinishedRequests sorted by uid."""
+        FinishedRequests sorted by uid (failed ones carry ``.error``).
+        Raises ``EngineStalledError`` naming the stuck requests if the
+        engine cannot drain within ``max_steps`` further steps."""
         for r in requests:
             self.submit(r)
+        start = self.step_count
         while self.pending:
-            if self.step_count >= max_steps:
-                raise RuntimeError(f"engine stalled after {max_steps} steps")
+            if self.step_count - start >= max_steps:
+                raise EngineStalledError(
+                    max_steps,
+                    running=[st.req.uid for st in self.slots
+                             if st is not None],
+                    waiting=[r.uid for r in self.waiting],
+                    preempted=[rec.st.req.uid for rec in self.preempted])
             self.step()
         return sorted(self.finished, key=lambda f: f.uid)

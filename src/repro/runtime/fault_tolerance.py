@@ -16,15 +16,27 @@ class InjectedFailure(RuntimeError):
 
 
 class FailureInjector:
-    """Raises at configured steps — but only once per step (the restarted
-    job passes through cleanly, like a real transient node failure)."""
+    """Raises at configured steps — ``repeats`` times per step (default
+    once: the restarted/retried pass sails through cleanly, like a real
+    transient node failure; ``repeats > 1`` models a persistent fault that
+    outlives bounded retry).  The serving-side chaos harness
+    (``runtime/chaos.py``) composes several of these, one per injection
+    channel (allocator, step, restore)."""
 
-    def __init__(self, fail_at_steps: tuple[int, ...] = ()):
-        self.remaining = set(fail_at_steps)
+    def __init__(self, fail_at_steps: tuple[int, ...] = (), repeats: int = 1):
+        self.remaining = {s: repeats for s in fail_at_steps}
+        self.fired = 0
+
+    def should_fail(self, step: int) -> bool:
+        """Consume one configured failure at ``step`` if any remain."""
+        if self.remaining.get(step, 0) > 0:
+            self.remaining[step] -= 1
+            self.fired += 1
+            return True
+        return False
 
     def maybe_fail(self, step: int) -> None:
-        if step in self.remaining:
-            self.remaining.discard(step)
+        if self.should_fail(step):
             raise InjectedFailure(f"injected node failure at step {step}")
 
 

@@ -1,0 +1,120 @@
+"""Host page offload: swap a request's pages to host memory and back.
+
+Preemption support for the serving engine (``runtime/engine.py``).  A
+preempted request's device pages — raw K/V *and* the per-page Stem
+selection summaries (``kg``/``vm``) and, implicitly, its cursor state held
+by the engine — are gathered into a snapshot, copied to host numpy
+buffers, and the device pages are returned to the ``PageAllocator``
+free list (``allocator.evict``).  Re-admission allocates a fresh set of
+physical pages (``allocator.restore``) and scatters the snapshot back
+bit-identically; because a page carries its own OAM/SAM summaries, the
+restored request resumes decode (or mid-prefill chunking) with **zero
+recompute** — no prefill replay, no summary rebuild, no extra traces.
+
+Both ``gather_pages`` and ``scatter_pages`` operate on the engine's
+per-layer pool tree (``PagePool`` leaves stacked ``(n_layers, hk, P, ...)``)
+with a fixed-width ``(max_pages_per_slot,)`` page-id row padded with the
+trash page, so the engine jits each exactly once
+(``launch/steps.make_page_extract`` / ``make_page_restore``).  Padding
+slots gather/scatter the trash page, which holds garbage by design.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.runtime import paged as paged_lib
+
+
+def _is_pool(x) -> bool:
+    return isinstance(x, paged_lib.PagePool)
+
+
+def gather_pages(pools, page_row):
+    """Extract the pages named by ``page_row`` from every layer's pool.
+
+    pools: the engine pool tree, PagePool leaves stacked (n, hk, P, ...).
+    page_row: (max_pages_per_slot,) int32 global page ids, trash-padded.
+    Returns the same tree shape with the page axis narrowed to the row
+    width — the device-side snapshot (copy to host with ``to_host``).
+    """
+    def one(pool: paged_lib.PagePool) -> paged_lib.PagePool:
+        return paged_lib.PagePool(
+            k=pool.k[:, :, page_row],
+            v=pool.v[:, :, page_row],
+            kg=pool.kg[:, :, page_row],
+            vm=pool.vm[:, :, page_row],
+        )
+
+    return jax.tree.map(one, pools, is_leaf=_is_pool)
+
+
+def scatter_pages(pools, page_row, snapshot):
+    """Write a snapshot back into the pages named by ``page_row``.
+
+    Exact inverse of ``gather_pages`` modulo page renaming: the snapshot's
+    i-th page lands in ``page_row[i]``, which need not be the page it was
+    gathered from — the engine's page-table row carries the new mapping.
+    Trash-padding slots rewrite page 0 (garbage by design, harmless).
+    """
+    def one(pool: paged_lib.PagePool,
+            snap: paged_lib.PagePool) -> paged_lib.PagePool:
+        return paged_lib.PagePool(
+            k=pool.k.at[:, :, page_row].set(snap.k),
+            v=pool.v.at[:, :, page_row].set(snap.v),
+            kg=pool.kg.at[:, :, page_row].set(snap.kg),
+            vm=pool.vm.at[:, :, page_row].set(snap.vm),
+        )
+
+    return jax.tree.map(one, pools, snapshot, is_leaf=_is_pool)
+
+
+def snapshot_nbytes(snapshot) -> int:
+    return sum(int(np.asarray(leaf).nbytes)
+               for leaf in jax.tree.leaves(snapshot))
+
+
+class HostPageStore:
+    """Host-side store of offloaded page snapshots, keyed by request uid.
+
+    ``put`` forces the device snapshot onto the host (numpy) so the device
+    pages can be reused immediately; ``pop`` hands the numpy tree back for
+    the jitted scatter (shapes/dtypes are fixed, so restore never retraces).
+    Tracks resident and peak bytes for the engine's metrics.
+    """
+
+    def __init__(self):
+        self._store: dict = {}
+        self.nbytes = 0
+        self.peak_nbytes = 0
+        self.total_offloads = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, uid) -> bool:
+        return uid in self._store
+
+    def put(self, uid, snapshot) -> None:
+        if uid in self._store:
+            raise ValueError(f"request {uid} already offloaded")
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), snapshot)
+        self._store[uid] = host
+        self.nbytes += snapshot_nbytes(host)
+        self.peak_nbytes = max(self.peak_nbytes, self.nbytes)
+        self.total_offloads += 1
+
+    def get(self, uid):
+        return self._store[uid]
+
+    def pop(self, uid):
+        snap = self._store.pop(uid)
+        self.nbytes -= snapshot_nbytes(snap)
+        return snap
+
+    def drop(self, uid) -> None:
+        """Discard a snapshot without restoring (aborted request)."""
+        if uid in self._store:
+            self.pop(uid)

@@ -280,13 +280,24 @@ def paged_sparse_decode(
 
 class PageAllocator:
     """Free-list page allocator over a fixed pool.  Page 0 (the trash page
-    for inactive slots) is never handed out."""
+    for inactive slots) is never handed out.
+
+    Every page id is in exactly one of two places at all times — the free
+    list or the allocated set — and ``check_conservation`` asserts that
+    partition.  ``evict``/``restore`` are the preemption-facing spellings of
+    ``free``/``alloc``: a victim's pages return to the free list while its
+    contents move to host memory (``runtime/offload.py``), and re-admission
+    draws a fresh (possibly different) set of physical pages to scatter the
+    snapshot back into."""
 
     def __init__(self, num_pages: int):
         if num_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, 0, -1))  # pop() -> lowest id
+        self._allocated: set = set()
+        self.evictions = 0
+        self.restores = 0
 
     @property
     def available(self) -> int:
@@ -296,12 +307,55 @@ class PageAllocator:
         """Return n page ids, or None (allocation is all-or-nothing)."""
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
 
     def free(self, pages) -> None:
         for p in pages:
             if not (0 < p < self.num_pages):
                 raise ValueError(f"bad page id {p}")
-            if p in self._free:
+            if p not in self._allocated:
                 raise ValueError(f"double free of page {p}")
+            self._allocated.discard(p)
             self._free.append(p)
+
+    def evict(self, pages) -> None:
+        """Free a preemption victim's pages (contents live on in the host
+        snapshot; the device pages are immediately reusable)."""
+        self.free(pages)
+        self.evictions += 1
+
+    def restore(self, n: int) -> Optional[list]:
+        """Allocate pages for a re-admitted (offloaded) request.  The ids
+        need not match the evicted ones — the page table re-maps."""
+        pages = self.alloc(n)
+        if pages is not None:
+            self.restores += 1
+        return pages
+
+    def check_conservation(self, held=None) -> bool:
+        """Assert free-list/allocated-set conservation: together they
+        partition pages 1..num_pages-1 with no duplicates or overlap.  With
+        ``held`` (the page ids the caller believes are live, e.g. the
+        engine's slot_pages), additionally assert the allocated set matches
+        — no orphaned pages after any recycle/preempt/restore path."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("duplicate page ids in the free list")
+        if free & self._allocated:
+            raise AssertionError(
+                f"pages both free and allocated: {sorted(free & self._allocated)}")
+        universe = set(range(1, self.num_pages))
+        if free | self._allocated != universe:
+            lost = sorted(universe - free - self._allocated)
+            raise AssertionError(f"orphaned pages (neither free nor "
+                                 f"allocated): {lost}")
+        if held is not None:
+            held = set(held)
+            if held != self._allocated:
+                raise AssertionError(
+                    f"allocator/holder mismatch: allocated-but-unheld "
+                    f"{sorted(self._allocated - held)}, held-but-unallocated "
+                    f"{sorted(held - self._allocated)}")
+        return True

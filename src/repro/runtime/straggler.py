@@ -27,6 +27,11 @@ class StragglerMonitor:
     def start(self) -> None:
         self._t0 = time.monotonic()
 
+    def cancel(self) -> None:
+        """Discard an in-flight timing (the timed step failed or did no
+        work) without polluting the EMA baseline."""
+        self._t0 = None
+
     def stop(self, step: int) -> float:
         assert self._t0 is not None, "start() not called"
         dt = time.monotonic() - self._t0

@@ -1,0 +1,228 @@
+"""Engine-level fault injection + graceful degradation (runtime/chaos.py).
+
+The contract under chaos: the engine NEVER crashes and NEVER wedges —
+every submitted request terminates, either finished or as an explicitly
+failed ``FinishedRequest`` (``.error`` set), and the page allocator's
+free-list conservation holds at exit (no orphaned pages through any
+recovery path).  Transient faults (within the retry bounds) must be fully
+absorbed: same results, no aborts.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core.config import StemConfig
+from repro.models import registry
+from repro.runtime.chaos import ChaosConfig, ChaosInjector
+from repro.runtime.engine import (EngineConfig, EngineStalledError, Request,
+                                  StemEngine)
+from repro.runtime.fault_tolerance import FailureInjector, InjectedFailure
+
+TINY = ArchConfig(
+    name="chaos-tiny", family="dense", num_layers=2, d_model=32,
+    num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+    qk_norm=True, dtype="float32",
+)
+STEM = StemConfig(block_size=8, sink_blocks=1, local_blocks=1,
+                  min_budget_blocks=2, stride=4)
+
+
+@pytest.fixture(scope="module")
+def built():
+    bundle = registry.build(TINY)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+def _mk(rng, uid, plen, mnt, **kw):
+    return Request(uid=uid,
+                   prompt=rng.randint(0, TINY.vocab_size,
+                                      size=(plen,)).astype(np.int32),
+                   max_new_tokens=mnt, **kw)
+
+
+def _ecfg(max_slots, per_slot, **kw):
+    return EngineConfig(max_slots=max_slots,
+                        num_pages=1 + max_slots * per_slot,
+                        max_pages_per_slot=per_slot, **kw)
+
+
+def test_transient_chaos_absorbed_bit_identical(built):
+    """Alloc denial + one step failure + one restore failure, all within
+    the retry bounds: every request finishes cleanly with the SAME tokens
+    as the chaos-free run — transient faults are invisible in outputs."""
+    bundle, params = built
+    rng = np.random.RandomState(5)
+    per_slot = -(-(20 + 8) // STEM.block_size)
+    reqs = [_mk(rng, i, 10 + 3 * i, 5) for i in range(4)]
+    reqs.append(_mk(rng, 9, 9, 3, priority=2, arrival_step=5))  # forces preempt
+    ecfg = _ecfg(2, per_slot)
+
+    clean = StemEngine(bundle, params, STEM, ecfg)
+    want = {f.uid: f.tokens for f in
+            clean.run([dataclasses.replace(r) for r in reqs])}
+
+    chaos = ChaosInjector(ChaosConfig(deny_alloc_steps=(0,), fail_steps=(3,),
+                                      fail_restore_steps=(6,)))
+    eng = StemEngine(bundle, params, STEM, ecfg, chaos=chaos)
+    fin = eng.run(reqs)
+
+    assert chaos.counts == {"alloc_denied": 1, "step_failed": 1,
+                            "restore_failed": 1}
+    assert eng.stats["alloc_denials"] == 1
+    assert eng.stats["step_failures"] == 1
+    assert eng.stats["restore_failures"] == 1
+    assert eng.stats["aborts"] == 0
+    assert len(fin) == len(reqs) and all(f.error is None for f in fin)
+    assert {f.uid: f.tokens for f in fin} == want, "chaos changed outputs"
+    eng.allocator.check_conservation([])
+
+
+def test_persistent_step_failure_degrades_not_crashes(built):
+    """A step fault outlasting the retry bound: the engine aborts its
+    lowest-priority active request (explicit error), retries with the
+    smaller batch, and the higher-priority request still completes."""
+    bundle, params = built
+    rng = np.random.RandomState(7)
+    per_slot = -(-(20 + 8) // STEM.block_size)
+    # 4 consecutive failures at step 2 vs max_step_retries=2: three failures
+    # force one abort, the fourth is absorbed by the post-abort retry.
+    chaos = ChaosInjector(ChaosConfig(fail_steps=(2,), step_repeats=4))
+    eng = StemEngine(bundle, params, STEM, _ecfg(2, per_slot), chaos=chaos)
+    fin = eng.run([_mk(rng, 0, 10, 6, priority=0),
+                   _mk(rng, 1, 11, 6, priority=1)])
+    errs = {f.uid: f.error for f in fin}
+    assert errs[0] is not None and "step failed" in errs[0]
+    assert errs[1] is None and len(fin[1].tokens) == 6
+    assert eng.stats["aborts"] == 1 and eng.stats["step_failures"] == 4
+    eng.allocator.check_conservation([])
+
+
+def test_total_step_failure_every_request_terminates(built):
+    """Worst case — the step fails forever at one engine step: everything
+    active is aborted with an error, nothing hangs, nothing leaks."""
+    bundle, params = built
+    rng = np.random.RandomState(9)
+    per_slot = -(-(20 + 8) // STEM.block_size)
+    chaos = ChaosInjector(ChaosConfig(fail_steps=(2,), step_repeats=10_000))
+    eng = StemEngine(bundle, params, STEM, _ecfg(2, per_slot), chaos=chaos)
+    fin = eng.run([_mk(rng, i, 10, 6) for i in range(2)])
+    assert len(fin) == 2 and all(f.error is not None for f in fin)
+    eng.allocator.check_conservation([])
+
+
+def test_restore_failure_retries_then_aborts(built):
+    """Persistent restore faults: the fresh pages are freed on every
+    attempt (conservation), and the offloaded request is aborted with an
+    explicit error after max_restore_retries — its snapshot is dropped."""
+    bundle, params = built
+    rng = np.random.RandomState(11)
+    per_slot = -(-(20 + 8) // STEM.block_size)
+    lp = _mk(rng, 0, 20, 8, priority=0)
+    hp = _mk(rng, 1, 13, 4, priority=1, arrival_step=4)
+    chaos = ChaosInjector(ChaosConfig(
+        fail_restore_steps=tuple(range(40)), restore_repeats=1))
+    eng = StemEngine(bundle, params, STEM,
+                     _ecfg(1, per_slot, max_restore_retries=2), chaos=chaos)
+    fin = eng.run([lp, hp])
+    errs = {f.uid: f.error for f in fin}
+    assert errs[1] is None, "HP request should finish normally"
+    assert errs[0] is not None and "restore failed" in errs[0]
+    assert eng.stats["restore_failures"] == 3     # 2 retries + final
+    assert eng.stats["preemptions"] == 1 and eng.stats["restores"] == 0
+    assert len(eng.host_store) == 0, "aborted snapshot not dropped"
+    eng.allocator.check_conservation([])
+
+
+def test_load_shedding_bounds_waiting_queue(built):
+    """max_waiting: overflow sheds the lowest-priority pending request as a
+    failed FinishedRequest; every submitted request still terminates."""
+    bundle, params = built
+    rng = np.random.RandomState(13)
+    per_slot = -(-(8 + 3) // STEM.block_size)
+    eng = StemEngine(bundle, params, STEM,
+                     _ecfg(1, per_slot, max_waiting=1))
+    reqs = [_mk(rng, i, 8, 3, priority=i % 2) for i in range(4)]
+    fin = eng.run(reqs)
+    assert len(fin) == 4, "a shed request vanished"
+    shed = [f for f in fin if f.error and f.error.startswith("shed")]
+    assert shed and eng.stats["shed"] == len(shed)
+    assert all(f.priority == 0 for f in shed), "shed a high-priority request"
+    assert all(f.slot == -1 and not f.tokens for f in shed)
+    done = [f for f in fin if f.error is None]
+    assert all(len(f.tokens) == 3 for f in done)
+    eng.allocator.check_conservation([])
+
+
+def test_alloc_denial_is_transient_not_preemption(built):
+    """An injected allocator denial must behave like momentary exhaustion:
+    admission waits a step — it must NOT preempt anyone or leak pages."""
+    bundle, params = built
+    rng = np.random.RandomState(17)
+    per_slot = -(-(10 + 4) // STEM.block_size)
+    chaos = ChaosInjector(ChaosConfig(deny_alloc_steps=(0, 1)))
+    eng = StemEngine(bundle, params, STEM, _ecfg(2, per_slot), chaos=chaos)
+    fin = eng.run([_mk(rng, 0, 10, 4, priority=0),
+                   _mk(rng, 1, 10, 4, priority=5)])
+    assert all(f.error is None for f in fin)
+    assert eng.stats["preemptions"] == 0
+    assert eng.stats["alloc_denials"] == 2
+    assert min(f.admitted_step for f in fin) >= 2
+    eng.allocator.check_conservation([])
+
+
+def test_engine_stalled_error_names_requests(built):
+    bundle, params = built
+    rng = np.random.RandomState(19)
+    per_slot = -(-(8 + 3) // STEM.block_size)
+    eng = StemEngine(bundle, params, STEM, _ecfg(1, per_slot))
+    eng.submit(_mk(rng, 42, 8, 3, arrival_step=10**9))
+    with pytest.raises(EngineStalledError, match=r"waiting uids \[42\]"):
+        eng.run(max_steps=5)
+    # The cap is relative to each run: after the operator drops the stuck
+    # request, the same engine keeps serving with a fresh step budget.
+    eng.waiting.clear()
+    fin = eng.run([_mk(rng, 43, 8, 3)], max_steps=50)
+    assert [f.uid for f in fin if f.error is None and f.uid == 43]
+
+
+def test_straggler_monitor_wired_into_step_loop(built):
+    """The engine times every working step; with a hair-trigger threshold
+    the monitor must flag steps into stats and engine.metrics."""
+    bundle, params = built
+    rng = np.random.RandomState(23)
+    per_slot = -(-(13 + 6) // STEM.block_size)
+    eng = StemEngine(bundle, params, STEM,
+                     _ecfg(1, per_slot, straggler_threshold=1e-9))
+    eng.run([_mk(rng, 0, 13, 6)])
+    assert eng.monitor.ema is not None and eng.monitor.ema > 0
+    assert eng.stats["straggler_steps"] > 0
+    assert eng.metrics["straggler_steps"], "flags missing from metrics"
+    assert eng.stats["straggler_steps"] == len(eng.monitor.flagged)
+
+
+def test_failure_injector_repeats():
+    inj = FailureInjector((3,), repeats=2)
+    assert not inj.should_fail(2)
+    assert inj.should_fail(3) and inj.should_fail(3)
+    assert not inj.should_fail(3)
+    assert inj.fired == 2
+    with pytest.raises(InjectedFailure):
+        FailureInjector((1,)).maybe_fail(1)
+
+
+def test_chaos_injector_counts():
+    chaos = ChaosInjector(ChaosConfig(deny_alloc_steps=(0,), fail_steps=(1,),
+                                      fail_restore_steps=(2,)))
+    assert chaos.deny_alloc(0) and not chaos.deny_alloc(0)
+    with pytest.raises(InjectedFailure):
+        chaos.maybe_fail_step(1)
+    chaos.maybe_fail_step(5)            # non-configured step: no-op
+    with pytest.raises(InjectedFailure):
+        chaos.maybe_fail_restore(2)
+    assert chaos.counts == {"alloc_denied": 1, "step_failed": 1,
+                            "restore_failed": 1}

@@ -90,9 +90,10 @@ def test_batch_invariance_and_recycling(built, budget_frac):
     # must genuinely overlap requests (continuous batching, not serial).
     assert engine.stats["slots_reused"] >= 3
     assert engine.stats["max_concurrency"] == 2
-    # drain: every page is back in the free list
+    # drain: every page is back in the free list, none orphaned
     assert engine.allocator.available == engine.ecfg.num_pages - 1
     assert all(st is None for st in engine.slots)
+    engine.allocator.check_conservation([])
 
     # Batch-invariance: each request decoded alone, in a fresh single-slot
     # engine (different slot shapes, different co-tenants, no staggering),
@@ -124,6 +125,7 @@ def test_admission_blocks_on_memory(built):
     assert len(finished) == 2
     assert engine.stats["max_concurrency"] == 1
     assert engine.allocator.available == ecfg.num_pages - 1
+    engine.allocator.check_conservation([])
 
 
 def test_oversized_request_rejected(built):
@@ -172,6 +174,7 @@ def test_page_recycling_isolation(built):
     shared.submit(second)
     reused = shared.run()
     assert shared.stats["slots_reused"] == 1
+    shared.allocator.check_conservation([])
 
     fresh = StemEngine(bundle, params, STEM, ecfg)
     alone = fresh.run([Request(uid=1, prompt=second.prompt,

@@ -1,0 +1,254 @@
+"""Preemption + host offload round-trip tests (runtime/offload.py, engine).
+
+The load-bearing property: preempt -> offload to host -> restore into
+*different* physical pages -> resume must be **bit-identical** to the
+uninterrupted run — same greedy tokens, same pool contents page-for-page,
+zero prefill recompute (no replayed chunks, no extra traces).  Pages carry
+their own OAM/SAM selection summaries, which is what makes this possible:
+a restored request's selection state is entirely in its pages + the
+engine's cursor snapshot.
+
+Property-tested over GQA group sizes and unaligned cache lengths at the
+paged-primitive level (cheap), plus full-engine differentials preempting
+mid-decode and mid-prefill.
+"""
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to fixed-seed parametrized sampling
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import ArchConfig
+from repro.core.config import StemConfig
+from repro.models import registry
+from repro.runtime import offload as offload_lib
+from repro.runtime.engine import EngineConfig, Request, StemEngine
+from repro.runtime.paged import (PageAllocator, append_token, init_pool,
+                                 paged_sparse_decode, reset_pages,
+                                 write_prefill_pages)
+
+TINY = ArchConfig(
+    name="preempt-tiny", family="dense", num_layers=2, d_model=32,
+    num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+    qk_norm=True, dtype="float32",
+)
+STEM = StemConfig(block_size=8, sink_blocks=1, local_blocks=1,
+                  min_budget_blocks=2, stride=4)
+HK_CHOICES = (1, 2, 4)      # kv heads
+GROUP_CHOICES = (1, 2, 4)   # GQA group size (hq = hk * group)
+
+
+@pytest.fixture(scope="module")
+def built():
+    bundle = registry.build(TINY)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+def _stack(pool):
+    """Single-layer pool -> the engine's stacked-leaf layout (1, hk, P, ...)."""
+    return jax.tree.map(lambda x: x[None], pool)
+
+
+def _unstack(pool):
+    return jax.tree.map(lambda x: x[0], pool)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    hk_idx=st.integers(0, len(HK_CHOICES) - 1),
+    group_idx=st.integers(0, len(GROUP_CHOICES) - 1),
+    true_len=st.integers(1, 3 * STEM.block_size),  # includes unaligned lengths
+)
+def test_offload_roundtrip_property(seed, hk_idx, group_idx, true_len):
+    """gather -> host -> scatter into *different* pages reproduces the pool
+    bitwise, and decode + incremental growth off the restored pages is
+    bit-identical to the uninterrupted pool — across GQA group sizes and
+    cache lengths that end mid-page."""
+    hk, group, d = HK_CHOICES[hk_idx], GROUP_CHOICES[group_idx], 8
+    npages_req, n_pages, maxp = 3, 8, 4
+    L = npages_req * STEM.block_size
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k = jax.random.normal(ks[0], (hk, L, d))
+    v = jax.random.normal(ks[1], (hk, L, d))
+    q = jax.random.normal(ks[2], (1, hk * group, 1, d))
+
+    pages_a, pages_b = [2, 5, 3], [6, 1, 4]      # deliberately different ids
+    row = lambda pages: jnp.asarray(pages + [0] * (maxp - len(pages)))
+    table = lambda pages: row(pages)[None]
+
+    pool_a = write_prefill_pages(
+        init_pool(n_pages, hk, STEM.block_size, d, STEM.stride),
+        jnp.asarray(pages_a), k, v, jnp.asarray(true_len), STEM)
+
+    # Preempt: snapshot, evict (pool pages go back to pristine for reuse),
+    # restore into a different set of physical pages of a fresh pool.
+    snap = jax.tree.map(lambda x: np.asarray(x),
+                        offload_lib.gather_pages(_stack(pool_a), row(pages_a)))
+    evicted = reset_pages(pool_a, jnp.asarray(pages_a))        # device reuse
+    pool_b = _unstack(offload_lib.scatter_pages(
+        _stack(init_pool(n_pages, hk, STEM.block_size, d, STEM.stride)),
+        row(pages_b), snap))
+
+    # Page-for-page: gathering the restored pages returns the snapshot bitwise.
+    back = offload_lib.gather_pages(_stack(pool_b), row(pages_b))
+    for got, want, name in zip(jax.tree.leaves(back), jax.tree.leaves(snap),
+                               ("k", "v", "kg", "vm")):
+        assert np.array_equal(np.asarray(got), want), f"{name} not bitwise"
+
+    # Decode off the restored pages == decode off the original pool, bitwise.
+    lens = jnp.asarray([true_len], jnp.int32)
+    out_a = paged_sparse_decode(q, write_prefill_pages(
+        evicted, jnp.asarray(pages_a), k, v, jnp.asarray(true_len), STEM),
+        table(pages_a), lens, STEM, budget_frac=0.5)
+    out_b = paged_sparse_decode(q, pool_b, table(pages_b), lens, STEM,
+                                budget_frac=0.5)
+    assert np.array_equal(np.asarray(out_a), np.asarray(out_b))
+
+    # Incremental growth continues seamlessly mid-page after the swap.
+    if true_len < L:
+        kn = jax.random.normal(ks[0], (1, hk, 1, d))
+        vn = jax.random.normal(ks[1], (1, hk, 1, d))
+        grown = append_token(pool_b, table(pages_b), lens, kn, vn, STEM)
+        ref = append_token(
+            write_prefill_pages(
+                init_pool(n_pages, hk, STEM.block_size, d, STEM.stride),
+                jnp.asarray(pages_a), k, v, jnp.asarray(true_len), STEM),
+            table(pages_a), lens, kn, vn, STEM)
+        got = offload_lib.gather_pages(_stack(grown), row(pages_b))
+        want = offload_lib.gather_pages(_stack(ref), row(pages_a))
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+def _ecfg(max_slots, plen, mnt, **kw):
+    per_slot = -(-(plen + mnt) // STEM.block_size)
+    return EngineConfig(max_slots=max_slots,
+                        num_pages=1 + max_slots * per_slot,
+                        max_pages_per_slot=per_slot, **kw)
+
+
+@pytest.mark.parametrize("preempt_after", [1, 4])  # mid-prefill / mid-decode
+def test_engine_preempt_restore_differential(built, preempt_after):
+    """Full-engine differential: force a preemption (mid-prefill at step 1
+    with a 20-token prompt; mid-decode at step 4), drain, and require the
+    run to be indistinguishable from an uninterrupted one — identical
+    greedy tokens, identical chunk/prefill work (zero recompute), no extra
+    traces, restored pages bitwise equal to the offloaded snapshot."""
+    bundle, params = built
+    rng = np.random.RandomState(17)
+    req = Request(uid=0,
+                  prompt=rng.randint(0, TINY.vocab_size, size=(20,)).astype(np.int32),
+                  max_new_tokens=8)
+    ecfg = _ecfg(1, 20, 8, budget_frac=0.5)
+
+    ref_eng = StemEngine(bundle, params, STEM, ecfg)
+    ref = ref_eng.run([Request(uid=0, prompt=req.prompt, max_new_tokens=8)])[0]
+
+    eng = StemEngine(bundle, params, STEM, ecfg)
+    eng.submit(req)
+    for _ in range(preempt_after):
+        eng.step()
+    assert eng.slots[0] is not None
+    phase = eng.slots[0].phase
+    eng.preempt(0)
+    eng.allocator.check_conservation([])           # all pages free while out
+    assert eng.slots[0] is None and len(eng.preempted) == 1
+    snap_host = copy.deepcopy(eng.host_store.get(0))
+    traces_before = eng.stats["traces"]
+
+    # Restore happens at admission; verify page-for-page before the next
+    # mixed step advances the slot.
+    eng._admit()
+    assert eng.slots[0] is not None and not eng.preempted
+    assert eng.stats["traces"] == traces_before, "restore retraced the step"
+    new_row = jnp.asarray(eng.page_table[0])
+    back = jax.tree.map(lambda x: np.asarray(x),
+                        eng._extract(eng.pools, new_row))
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(snap_host)):
+        assert np.array_equal(got, want), "restored pages differ from snapshot"
+    eng.allocator.check_conservation(
+        [p for pages in eng.slot_pages if pages for p in pages])
+
+    out = eng.run()[0]
+    assert out.tokens == ref.tokens, f"preempted ({phase}) run diverged"
+    assert out.preemptions == 1 and out.error is None
+    # Zero recompute: same chunk count and exactly one prefill completion,
+    # and the preempt/restore jits added no unified-step traces.
+    assert eng.stats["chunks"] == ref_eng.stats["chunks"]
+    assert eng.stats["prefills"] == ref_eng.stats["prefills"] == 1
+    assert eng.stats["traces"] == 2
+    assert eng.stats["restores"] == 1
+    assert len(eng.host_store) == 0
+    eng.allocator.check_conservation([])           # drained: no leaks
+
+
+def test_priority_admission_preempts_lower(built):
+    """A high-priority arrival may evict a running lower-priority request
+    (slot-blocked case): the victim swaps out, the HP request completes
+    first, the victim restores and finishes with its uninterrupted stream."""
+    bundle, params = built
+    rng = np.random.RandomState(23)
+    mk = lambda uid, plen, mnt, **kw: Request(
+        uid=uid, prompt=rng.randint(0, TINY.vocab_size, size=(plen,)).astype(np.int32),
+        max_new_tokens=mnt, **kw)
+    lp = mk(0, 20, 8, priority=0)
+    hp = mk(1, 13, 4, priority=1, arrival_step=4)
+    ecfg = _ecfg(1, 20, 8)
+
+    ref_lp = StemEngine(bundle, params, STEM, ecfg).run(
+        [Request(uid=0, prompt=lp.prompt, max_new_tokens=8)])[0]
+    ref_hp = StemEngine(bundle, params, STEM, ecfg).run(
+        [Request(uid=1, prompt=hp.prompt, max_new_tokens=4)])[0]
+
+    eng = StemEngine(bundle, params, STEM, ecfg)
+    fin = eng.run([lp, hp])
+    assert eng.stats["preemptions"] == 1 and eng.stats["restores"] == 1
+    assert fin[1].finished_step < fin[0].finished_step, "HP did not jump queue"
+    assert fin[0].tokens == ref_lp.tokens
+    assert fin[1].tokens == ref_hp.tokens
+    assert fin[0].preemptions == 1 and fin[1].preemptions == 0
+    # Swapped-out time shows up in the victim's inter-token gaps, not the
+    # winner's; its TTFT was set before eviction and stays.
+    eng.allocator.check_conservation([])
+
+
+def test_preemption_disabled_keeps_fcfs_order(built):
+    """With preemption off (or the fcfs scheduler), a high-priority arrival
+    waits like anyone else — no eviction, single admission order."""
+    bundle, params = built
+    rng = np.random.RandomState(29)
+    lp = Request(uid=0, prompt=rng.randint(0, 64, size=(20,)).astype(np.int32),
+                 max_new_tokens=8, priority=0)
+    hp = Request(uid=1, prompt=rng.randint(0, 64, size=(13,)).astype(np.int32),
+                 max_new_tokens=4, priority=1, arrival_step=4)
+    for kw in ({"preemption": False}, {"scheduler": "fcfs"}):
+        eng = StemEngine(bundle, params, STEM, _ecfg(1, 20, 8, **kw))
+        fin = eng.run([dataclasses.replace(lp), dataclasses.replace(hp)])
+        assert eng.stats["preemptions"] == 0
+        assert fin[0].finished_step < fin[1].finished_step
+        eng.allocator.check_conservation([])
+
+
+def test_allocator_evict_restore_conservation():
+    a = PageAllocator(8)
+    held = a.alloc(3)
+    other = a.alloc(2)
+    a.check_conservation(held + other)
+    a.evict(held)                       # preempt: pages back to the free list
+    a.check_conservation(other)
+    back = a.restore(3)                 # re-admission draws a fresh set
+    a.check_conservation(other + back)
+    assert a.evictions == 1 and a.restores == 1
+    a.free(back)
+    a.free(other)
+    a.check_conservation([])
