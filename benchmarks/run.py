@@ -19,6 +19,9 @@ accuracy benchmarks).  Mapping to the paper:
   policy_parity.py        named SparsityPolicy stack (stem / uniform-sam /
                           streaming) through the shared executor (writes
                           BENCH_policy.json standalone)
+  prefix_cache.py         prefix-caching A/B: shared system prompt across
+                          tenants, pages/TTFT with sharing on vs off
+                          (writes BENCH_prefix.json standalone)
 """
 from __future__ import annotations
 
@@ -28,8 +31,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (ablation, cost_model, latency, oam_vs_sam,
-                            policy_parity, position_sensitivity, ragged_exec,
-                            roofline, sensitivity, serving)
+                            policy_parity, position_sensitivity, prefix_cache,
+                            ragged_exec, roofline, sensitivity, serving)
 
     modules = [
         ("cost_model", cost_model),
@@ -37,6 +40,7 @@ def main() -> None:
         ("ragged_exec", ragged_exec),
         ("serving", serving),
         ("policy_parity", policy_parity),
+        ("prefix_cache", prefix_cache),
         ("oam_vs_sam", oam_vs_sam),
         ("ablation", ablation),
         ("sensitivity", sensitivity),

@@ -97,6 +97,7 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
         chunk_size=args.chunk_size or None,
         step_token_budget=args.step_token_budget or None,
         monolithic_prefill=args.monolithic,
+        prefix_cache=args.prefix_cache,
         scheduler=args.scheduler,
         max_waiting=args.max_waiting or None)
     chaos = None
@@ -159,6 +160,12 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
               f"{s['aborts']}, step failures {s['step_failures']}, restore "
               f"failures {s['restore_failures']}; offload peak "
               f"{metrics['offload_peak_bytes']} B", flush=True)
+    if args.prefix_cache:
+        print(f"  prefix cache: hits {s['prefix_hits']}, pages shared "
+              f"{s['prefix_pages_shared']}, cows {s['prefix_cows']}; "
+              f"allocator shares {engine.allocator.shares}, cached pages "
+              f"{engine.allocator.cached_pages}, total alloced "
+              f"{engine.allocator.total_alloced}", flush=True)
     if metrics["straggler_steps"]:
         worst = max(metrics["straggler_steps"], key=lambda f: f[1])
         print(f"  stragglers: {len(metrics['straggler_steps'])} flagged "
@@ -168,10 +175,14 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
     return out
 
 
-def run_fixed_batch(args, cfg, bundle, params, stem_cfg):
-    """Legacy one-shot batch, ragged: pad per request, per-row cache_lens."""
+def run_fixed_batch(args, cfg, bundle, params, stem_cfg, budget_frac=1.0):
+    """Legacy one-shot batch, ragged: pad per request, per-row cache_lens.
+    With ``stem_cfg`` both prefill AND decode run policy-sparse (decode
+    re-summarizes the contiguous cache per step — the differential
+    reference arm for the paged engine)."""
     import jax
     import jax.numpy as jnp
+    from repro.core import policy as policy_lib
     from repro.launch import steps as steps_lib
     from repro.models import transformer
 
@@ -192,14 +203,21 @@ def run_fixed_batch(args, cfg, bundle, params, stem_cfg):
                        size=(args.requests,)).astype(np.int32)
     max_prompt = int(lens.max())
     max_len = max_prompt + args.decode_tokens
+    if stem_cfg is not None:
+        # Sparse decode re-summarizes the contiguous cache, which needs the
+        # cache length to be a whole number of blocks.
+        bs = policy_lib.as_policy(stem_cfg).block_size
+        max_len = -(-max_len // bs) * bs
     toks = np.zeros((args.requests, max_prompt), np.int32)
     for i, L in enumerate(lens):
         toks[i, :L] = rng.randint(0, cfg.vocab_size, size=(int(L),))
 
     prefill = jax.jit(lambda p, b, lp: bundle.prefill(
         p, b, max_len=max_len, stem_cfg=stem_cfg, last_pos=lp))
-    serve = jax.jit(steps_lib.make_serve_step(bundle), donate_argnums=(2,),
-                    static_argnames=())
+    serve = jax.jit(
+        steps_lib.make_serve_step(bundle, stem_cfg=stem_cfg,
+                                  budget_frac=budget_frac),
+        donate_argnums=(2,), static_argnames=())
 
     t0 = time.perf_counter()
     batch = {"tokens": jnp.asarray(toks)}
@@ -255,6 +273,11 @@ def main(argv=None) -> dict:
                     help="max tokens one engine step spends (decode tokens "
                          "first, then prefill chunks); 0 = auto "
                          "(max_slots + chunk)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="hash-keyed prefix-page sharing with copy-on-write: "
+                         "admission maps matched whole prompt pages "
+                         "read-only and prefills only the unmatched suffix "
+                         "(chunked prefill only)")
     ap.add_argument("--monolithic", action="store_true",
                     help="legacy one-shot admission prefill (per-length "
                          "traces, head-of-line blocking) — the chunked A/B "
@@ -320,7 +343,7 @@ def main(argv=None) -> dict:
 
     if args.fixed_batch:
         return run_fixed_batch(args, cfg, bundle, params,
-                               stem_cfg if sparse else None)
+                               stem_cfg if sparse else None, budget_frac)
     return run_engine(args, cfg, bundle, params, stem_cfg, budget_frac)
 
 

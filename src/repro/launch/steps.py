@@ -116,17 +116,25 @@ def set_cache_positions(caches, cache_lens: jnp.ndarray):
         is_leaf=lambda x: isinstance(x, (attention.KVCache, mla.MLACache)))
 
 
-def make_serve_step(bundle: registry.ModelBundle):
+def make_serve_step(bundle: registry.ModelBundle, *, stem_cfg=None,
+                    budget_frac: float = 1.0):
     """(params, tokens, caches[, cache_lens]) -> (logits, caches).
 
     ``cache_lens`` (``(b,)`` int32) overrides the caches' write positions
     per sequence — the ragged fixed-batch path: each row decodes against
     its own prompt length instead of one shared scalar.  Positions advance
-    inside the caches afterwards, so pass it only on the first step."""
+    inside the caches afterwards, so pass it only on the first step.
+
+    With ``stem_cfg`` the decode is policy-sparse over the contiguous cache
+    (``attention.apply_decode`` summarizes + selects per step) — the
+    fixed-batch reference arm for the paged engine's sparse decode."""
     def serve_step(params, tokens, caches, cache_lens=None):
         if cache_lens is not None:
             caches = set_cache_positions(caches, cache_lens)
-        return bundle.decode_step(params, tokens, caches)
+        if stem_cfg is None:
+            return bundle.decode_step(params, tokens, caches)
+        return bundle.decode_step(params, tokens, caches,
+                                  stem_cfg=stem_cfg, budget_frac=budget_frac)
     return serve_step
 
 
@@ -184,6 +192,17 @@ def make_page_restore():
     def restore_pages(pools, page_row, snapshot):
         return offload_lib.scatter_pages(pools, page_row, snapshot)
     return restore_pages
+
+
+def make_page_copy():
+    """(pools, src, dst) -> pools: duplicate one page (K/V + kg/vm) across
+    every layer's pool — the device half of copy-on-write.  ``src``/``dst``
+    are traced scalar page ids, so the engine jits this exactly once."""
+    from repro.runtime import paged as paged_lib
+
+    def page_copy(pools, src, dst):
+        return paged_lib.copy_pages_stacked(pools, src, dst)
+    return page_copy
 
 
 def make_monolithic_prefill(bundle: registry.ModelBundle, *, stem_cfg,

@@ -167,12 +167,21 @@ def apply_decode(
     *,
     window: Optional[int] = None,
     use_rope: bool = True,
+    stem_cfg=None,
+    budget_frac: float = 1.0,
 ) -> tuple[jnp.ndarray, KVCache]:
     """One decode step against the cache (ring buffer when windowed).
 
     ``cache.pos`` may be a scalar (every row at the same length — the seed
     behaviour) or a ``(b,)`` vector (ragged batch: each sequence writes and
-    masks at its own length; rope uses the per-row position)."""
+    masks at its own length; rope uses the per-row position).
+
+    With ``stem_cfg`` (any policy spelling; global attention only) the step
+    is POLICY-SPARSE over the contiguous cache: the cache is re-summarized
+    per step (O(L) — a test/reference arm, not a serving path) and the
+    policy's metric + budget rule select blocks exactly as the paged
+    engine's ``apply_decode_paged`` does over pages.  This is the
+    fixed-batch differential reference for every registered policy."""
     pos = cache.pos
     b = x.shape[0]
     rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]      # (1,)|(b,1)
@@ -186,6 +195,22 @@ def apply_decode(
         ck, cv = common.update_ring_cache(cache.k, cache.v, pos, k_new, v_new, L)
         slot_age = posv[:, None] - ((posv[:, None] - jnp.arange(L)[None, :]) % L)
         valid = (slot_age >= 0) & (slot_age > posv[:, None] - L)
+    if stem_cfg is not None:
+        if window is not None:
+            raise NotImplementedError(
+                "policy-sparse decode needs global attention, not windowed")
+        from repro.core import decode as decode_lib
+
+        pol = policy_lib.as_policy(stem_cfg)
+        if L % pol.block_size != 0:
+            raise ValueError(
+                f"sparse decode needs cache len {L} % block "
+                f"{pol.block_size} == 0")
+        summary = decode_lib.summarize_cache(ck, cv, pol)
+        o = decode_lib.sparse_decode_attention(
+            q, ck, cv, summary, posv + 1, pol, budget_frac=budget_frac)
+        out = jnp.einsum("bhsk,hkd->bsd", o.astype(x.dtype), params["wo"])
+        return out, KVCache(k=ck, v=cv, pos=pos + 1)
     h = q.shape[1]
     hk = ck.shape[1]
     group = h // hk

@@ -50,7 +50,7 @@ def build(cfg: ArchConfig) -> ModelBundle:
         abstract_params=lambda: transformer.abstract_params(cfg),
         loss_fn=lambda p, b, **kw: transformer.loss_fn(p, b, cfg, **kw),
         prefill=lambda p, b, **kw: transformer.prefill(p, b, cfg, **kw),
-        decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+        decode_step=lambda p, t, c, **kw: transformer.decode_step(p, t, c, cfg, **kw),
         init_caches=lambda batch, max_len: transformer.init_caches(cfg, batch, max_len),
     )
 

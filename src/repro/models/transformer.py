@@ -220,10 +220,13 @@ def _sublayer_prefill(params, x, cfg: ArchConfig, kind: str, *, positions,
     return x + y, aux, cache
 
 
-def _sublayer_decode(params, x, cfg: ArchConfig, kind: str, cache):
+def _sublayer_decode(params, x, cfg: ArchConfig, kind: str, cache, *,
+                     stem_cfg=None, budget_frac: float = 1.0):
     h = common.rms_norm(x, params["norm1"])
     if kind in ("dense", "moe"):
-        mix, cache = attention.apply_decode(params["attn"], h, cfg, cache)
+        mix, cache = attention.apply_decode(params["attn"], h, cfg, cache,
+                                            stem_cfg=stem_cfg,
+                                            budget_frac=budget_frac)
     elif kind == "dense_local":
         mix, cache = attention.apply_decode(params["attn"], h, cfg, cache,
                                             window=cfg.rglru.window)
@@ -613,6 +616,55 @@ def prefill_kv_pages(params, tokens: jnp.ndarray, true_len: jnp.ndarray,
     return logits[0], new_pools
 
 
+def prefill_kv_pages_suffix(params, tokens: jnp.ndarray,
+                            true_len: jnp.ndarray, start: int, pools,
+                            page_row: jnp.ndarray, cfg: ArchConfig,
+                            stem_cfg, budget_frac: float = 1.0):
+    """Prefill ONE request's unmatched suffix against already-written
+    prefix pages — the prefix-caching admission entry.
+
+    Positions ``[start, Lp)`` run as a single chunk lane of
+    ``paged_mixed_step``: the chunk's queries attend causally over the
+    whole prompt *through the page table*, so the leading ``start /
+    page_size`` pages of ``page_row`` may be prefix pages SHARED with other
+    slots — they are read, never written (chunk writes cover only the
+    chunk's own pages).  The caller must reset the private (suffix + spill)
+    pages beforehand and must NOT reset the shared prefix pages.
+
+    tokens: (1, Lp) right-padded to a page multiple; true_len: scalar int32
+    (> start); start: static block-aligned matched-prefix offset; page_row:
+    (max_pages_per_slot,) trash-padded.  Returns (next-token logits
+    (vocab,), new pools).  jit-able: one trace per (Lp, start) bucket.
+    """
+    from repro.core import chunked as chunked_lib
+
+    stem_cfg = policy_lib.as_policy(stem_cfg)
+    bs = stem_cfg.block_size
+    lp = tokens.shape[1]
+    if start % bs != 0 or not 0 <= start < lp:
+        raise ValueError(f"matched-prefix offset {start} must be a block "
+                         f"multiple inside the padded prompt (Lp={lp})")
+    nc = (lp - start) // bs
+    budgets = chunked_lib.chunk_budget_rows(stem_cfg, lp, start, nc)
+    tl = jnp.asarray(true_len, jnp.int32)
+    chunk = {
+        "tokens": tokens[:, start:],
+        "page_table": page_row[None],
+        "start": jnp.full((1,), start, jnp.int32),
+        "true_len": tl[None],
+        "budgets": jnp.asarray(budgets, jnp.int32)[None],
+        "last": (tl - 1 - start)[None],
+    }
+    # Idle decode lane: zero page table -> its masked write lands in the
+    # trash page, exactly like an inactive engine slot.
+    _, chunk_logits, new_pools = paged_mixed_step(
+        params, jnp.zeros((1, 1), jnp.int32), pools,
+        jnp.zeros((1, page_row.shape[0]), jnp.int32),
+        jnp.zeros((1,), jnp.int32), cfg, stem_cfg=stem_cfg,
+        budget_frac=budget_frac, chunk=chunk)
+    return chunk_logits[0], new_pools
+
+
 def paged_mixed_step(params, tokens: jnp.ndarray, pools,
                      page_table: jnp.ndarray, cache_lens: jnp.ndarray,
                      cfg: ArchConfig, *, stem_cfg,
@@ -716,8 +768,16 @@ def paged_decode_step(params, tokens: jnp.ndarray, pools,
     return logits, new_pools
 
 
-def decode_step(params, tokens: jnp.ndarray, caches, cfg: ArchConfig):
-    """One token for every sequence in the batch.  tokens: (b, 1)."""
+def decode_step(params, tokens: jnp.ndarray, caches, cfg: ArchConfig, *,
+                stem_cfg=None, budget_frac: float = 1.0):
+    """One token for every sequence in the batch.  tokens: (b, 1).
+
+    With ``stem_cfg`` the attention sub-layers decode POLICY-SPARSE over
+    the contiguous cache (summarize + select per step) — the fixed-batch
+    reference for the paged engine's sparse decode.  Only global-attention
+    architectures support it (same constraint as paged serving)."""
+    if stem_cfg is not None:
+        assert_paged_servable(cfg)
     x = common.embed_lookup(params["embed"], tokens, cfg.jnp_dtype)
     if cfg.embed_scale_flag:
         x = x * (cfg.d_model ** 0.5)
@@ -731,7 +791,8 @@ def decode_step(params, tokens: jnp.ndarray, caches, cfg: ArchConfig):
             new_cache = {}
             for i, k in enumerate(kinds):
                 x, c = _sublayer_decode(layer_params[f"sub{i}"], x, cfg, k,
-                                        cache[f"sub{i}"])
+                                        cache[f"sub{i}"], stem_cfg=stem_cfg,
+                                        budget_frac=budget_frac)
                 new_cache[f"sub{i}"] = c
             return x, new_cache
 

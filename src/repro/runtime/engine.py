@@ -170,6 +170,15 @@ class EngineConfig:
     admission prefill (the chunked-vs-monolithic A/B baseline, and the
     fallback for threshold selectors chunked prefill cannot serve).
 
+    ``prefix_cache`` enables hash-keyed prefix-page sharing: admission
+    probes the allocator's prefix index per whole prompt page, maps hits
+    read-only into the slot's page table, and starts the chunked
+    ``prefill_pos`` cursor past the matched prefix — only the unmatched
+    suffix is prefilled and only suffix pages are newly allocated.
+    Completed prompts register their full pages for future tenants.
+    Requires chunked prefill (the skip is chunk-granular), so it is
+    mutually exclusive with ``monolithic_prefill``.
+
     Overload-resilience knobs:
       ``scheduler``          "slo" (priority + SLO-headroom ordering,
                              preemption-capable) or "fcfs" (the PR 5
@@ -200,6 +209,7 @@ class EngineConfig:
     chunk_size: Optional[int] = None
     step_token_budget: Optional[int] = None
     monolithic_prefill: bool = False
+    prefix_cache: bool = False
     scheduler: str = "slo"
     preemption: bool = True
     max_waiting: Optional[int] = None
@@ -212,6 +222,10 @@ class EngineConfig:
         if self.scheduler not in ("slo", "fcfs"):
             raise ValueError(f"unknown scheduler {self.scheduler!r} "
                              "(expected 'slo' or 'fcfs')")
+        if self.prefix_cache and self.monolithic_prefill:
+            raise ValueError(
+                "prefix_cache needs chunked prefill (the matched-prefix "
+                "skip is chunk-granular); disable monolithic_prefill")
 
     @classmethod
     def for_trace(cls, *, max_slots: int, max_prompt: int,
@@ -250,17 +264,39 @@ class _SlotState:
     token_latencies_s: list = dataclasses.field(default_factory=list)
     preemptions: int = 0
     last_sched_step: int = 0      # last step granted a decode token
+    prefix_keys: list = dataclasses.field(default_factory=list)
+                                  # chained hash per full prompt page, to
+                                  # register once prefill completes
 
 
 @dataclasses.dataclass
 class _Preempted:
-    """A swapped-out request: slot state frozen, pages on the host."""
+    """A swapped-out request: slot state frozen, PRIVATE pages on the host.
+    Shared prefix pages are never snapshotted — their contents belong to
+    the prefix index (other tenants may be reading them); the record keeps
+    one pinned reference per shared page so they survive until restore."""
     st: _SlotState
-    npages: int                   # device pages to re-reserve
+    npages: int                   # private device pages to re-reserve
     cache_len: int                # cache_lens value at preemption
     seq: int                      # original submission order
     preempt_step: int
     restore_attempts: int = 0
+    shared_pages: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _PrefixMatch:
+    """Admission-time prefix probe result, refs already pinned.
+
+    ``shared``: matched pages mapped read-only into the page table (before
+    the replay window — never written again).  ``cow``: matched pages that
+    overlap the replay window (only the final full page of an
+    exact-page-multiple fully-matched prompt: its logits must be recomputed,
+    so the chunk REWRITES that page — copy-on-write redirects the write to
+    a private copy).  ``keys``: chained hash of every full prompt page."""
+    keys: list
+    shared: list
+    cow: list
 
 
 class StemEngine:
@@ -311,6 +347,7 @@ class StemEngine:
         self.page_table = np.zeros((S, P), np.int32)
         self.cache_lens = np.zeros((S,), np.int32)
         self.slot_pages: list = [None] * S     # page ids held by each slot
+        self.slot_nshared = [0] * S            # leading prefix-shared pages
         self.slots: list = [None] * S          # _SlotState | None
         self.waiting: collections.deque = collections.deque()
         self.preempted: list = []              # _Preempted records
@@ -325,7 +362,9 @@ class StemEngine:
                       "step_failures": 0, "aborts": 0, "shed": 0,
                       "decode_deferrals": 0, "chunk_caps": 0,
                       "starvation_grants": 0, "alloc_denials": 0,
-                      "straggler_steps": 0}
+                      "straggler_steps": 0,
+                      "prefix_hits": 0, "prefix_pages_shared": 0,
+                      "prefix_cows": 0}
         self._slot_ever_used = [False] * S
         self._seq: dict = {}                   # uid -> submission order
         self._arrival_t: dict = {}             # uid -> first-schedulable wall
@@ -362,6 +401,10 @@ class StemEngine:
         self._extract = jax.jit(steps_lib.make_page_extract())
         self._restore_pages = jax.jit(steps_lib.make_page_restore(),
                                       donate_argnums=(0,))
+        # Copy-on-write device copy (prefix caching); traced page ids, so
+        # this compiles once and never touches the trace counters.
+        self._page_copy = jax.jit(steps_lib.make_page_copy(),
+                                  donate_argnums=(0,))
         self._prefill = None
         if ecfg.monolithic_prefill:
             # Legacy A/B arm: one trace per padded prompt-length bucket.
@@ -412,6 +455,9 @@ class StemEngine:
             "offload_peak_bytes": self.host_store.peak_nbytes,
             "allocator_evictions": self.allocator.evictions,
             "allocator_restores": self.allocator.restores,
+            "allocator_total_alloced": self.allocator.total_alloced,
+            "prefix_shares": self.allocator.shares,
+            "prefix_cached_pages": self.allocator.cached_pages,
             "chaos": self.chaos.counts if self.chaos else None,
         }
 
@@ -422,44 +468,57 @@ class StemEngine:
         return None
 
     def _check_pages(self) -> None:
-        """Free-list conservation after any path that moves pages: every
-        page is exactly one of {free, held by a slot}; offloaded requests
-        hold none."""
+        """Refcount conservation after any path that moves pages: the
+        engine's live references — one per slot-held page, plus one per
+        shared prefix page pinned by an offloaded request — must match the
+        allocator's refcounts exactly (a MULTISET: a page shared by k slots
+        appears k times)."""
         held = [p for pages in self.slot_pages if pages for p in pages]
+        held += [p for rec in self.preempted for p in rec.shared_pages]
         self.allocator.check_conservation(held)
 
     # -- preemption + host offload ------------------------------------------
 
     def preempt(self, slot: int) -> None:
-        """Swap a running request out to host memory: gather its pages
-        (K/V + kg/vm summaries) into a host snapshot, evict the device
-        pages, and park the frozen slot state on the preempted list.
+        """Swap a running request out to host memory: gather its PRIVATE
+        pages (K/V + kg/vm summaries) into a host snapshot, evict them, and
+        park the frozen slot state on the preempted list.  Prefix-shared
+        pages are neither snapshotted nor evicted — their contents stay
+        live for co-tenants; the record re-pins them (keeps this request's
+        reference) so they cannot be reclaimed before restore.
         Re-admission restores bit-identically with zero recompute."""
         st = self.slots[slot]
         if st is None:
             raise ValueError(f"slot {slot} is not active")
         pages = self.slot_pages[slot]
+        nshared = self.slot_nshared[slot]
+        shared, private = pages[:nshared], pages[nshared:]
         row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
-        row[:len(pages)] = pages
+        row[:len(private)] = private
         snap = self._extract(self.pools, jnp.asarray(row))
-        self.host_store.put(st.req.uid, snap)
+        self.host_store.put(st.req.uid, snap, pinned=shared)
         st.preemptions += 1
         self.preempted.append(_Preempted(
-            st=st, npages=len(pages), cache_len=int(self.cache_lens[slot]),
-            seq=self._seq[st.req.uid], preempt_step=self.step_count))
-        self.allocator.evict(pages)
+            st=st, npages=len(private), cache_len=int(self.cache_lens[slot]),
+            seq=self._seq[st.req.uid], preempt_step=self.step_count,
+            shared_pages=list(shared)))
+        self.allocator.evict(private)
         self.page_table[slot] = 0
         self.cache_lens[slot] = 0
         self.slot_pages[slot] = None
+        self.slot_nshared[slot] = 0
         self.slots[slot] = None
         self.stats["preemptions"] += 1
         self._check_pages()
 
     def _admit_restore(self, rec: _Preempted, slot: int, pages: list) -> bool:
-        """Swap a preempted request back in.  On an injected restore
-        failure: free the fresh pages (conservation), keep the snapshot,
-        retry on a later step — or abort the request with an explicit
-        error once ``max_restore_retries`` is exhausted."""
+        """Swap a preempted request back in: scatter the private snapshot
+        into the fresh pages; the pinned shared prefix pages re-enter the
+        page table untouched (their contents never left the device).  On an
+        injected restore failure: free the fresh pages (conservation), keep
+        the snapshot + pins, retry on a later step — or abort the request
+        with an explicit error once ``max_restore_retries`` is exhausted
+        (releasing the pins)."""
         row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
         row[:rec.npages] = pages
         try:
@@ -471,6 +530,8 @@ class StemEngine:
             self.stats["restore_failures"] += 1
             if rec.restore_attempts > self.ecfg.max_restore_retries:
                 self.host_store.drop(rec.st.req.uid)
+                if rec.shared_pages:
+                    self.allocator.free(rec.shared_pages)
                 self.stats["aborts"] += 1
                 self._finish_with_error(
                     rec.st, slot=-1,
@@ -482,12 +543,16 @@ class StemEngine:
             return False
         snap = self.host_store.pop(rec.st.req.uid)
         self.pools = self._restore_pages(self.pools, jnp.asarray(row), snap)
+        all_pages = list(rec.shared_pages) + list(pages)
+        full_row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
+        full_row[:len(all_pages)] = all_pages
         if self._slot_ever_used[slot]:
             self.stats["slots_reused"] += 1
         self._slot_ever_used[slot] = True
-        self.page_table[slot] = row
+        self.page_table[slot] = full_row
         self.cache_lens[slot] = rec.cache_len
-        self.slot_pages[slot] = pages
+        self.slot_pages[slot] = all_pages
+        self.slot_nshared[slot] = len(rec.shared_pages)
         self.slots[slot] = rec.st
         self.stats["restores"] += 1
         self._check_pages()
@@ -504,7 +569,11 @@ class StemEngine:
                    if st is not None and st.req.priority < priority]
         if not victims:
             return False
-        reclaimable = sum(len(self.slot_pages[s]) for s in victims)
+        # Only a victim's PRIVATE pages come back (shared prefix pages stay
+        # pinned by its preemption record); still an upper bound when a
+        # private page is also shared by another slot.
+        reclaimable = sum(len(self.slot_pages[s]) - self.slot_nshared[s]
+                          for s in victims)
         if self.allocator.available + reclaimable < need_pages:
             return False
         # Lowest priority loses first; among equals, the most recently
@@ -537,6 +606,7 @@ class StemEngine:
         self.page_table[slot] = 0
         self.cache_lens[slot] = 0
         self.slot_pages[slot] = None
+        self.slot_nshared[slot] = 0
         self.slots[slot] = None
         self.stats["aborts"] += 1
         self._check_pages()
@@ -615,17 +685,50 @@ class StemEngine:
         self._admit_loop()
         self._shed()
 
+    def _probe_prefix(self, req: Request) -> _PrefixMatch:
+        """Probe the allocator's prefix index for the request's whole prompt
+        pages and PIN every hit (take a reference) before any allocation —
+        an alloc drawing on the cached-LRU pool could otherwise reclaim a
+        just-probed page.  The caller must ``_release_prefix`` if admission
+        blocks.  The longest matched *chain* wins: a miss at page j stops
+        the scan (page j+1's contents depend on page j's tokens)."""
+        plen = len(req.prompt)
+        bs = self.page_size
+        padded_len = -(-plen // bs) * bs
+        budgets = self.policy.prefill_budgets(padded_len)
+        keys = paged_lib.prefix_page_keys(req.prompt, budgets, bs)
+        # The page holding the prompt's LAST token is always replayed (its
+        # position produces the first generated token's logits), and the
+        # replay chunk rewrites it — a hit there goes to the CoW list.
+        last_page = (plen - 1) // bs
+        shared, cow = [], []
+        for j, key in enumerate(keys):
+            p = self.allocator.probe(key)
+            if p is None:
+                break
+            self.allocator.share(p)
+            (shared if j < last_page else cow).append(p)
+        return _PrefixMatch(keys=keys, shared=shared, cow=cow)
+
+    def _release_prefix(self, prefix: Optional[_PrefixMatch]) -> None:
+        if prefix is not None and (prefix.shared or prefix.cow):
+            self.allocator.free(prefix.shared + prefix.cow)
+
     def _admit_loop(self) -> None:
         while True:
             cand = self._next_candidate()
             if cand is None:
                 return
             kind, idx = cand
+            prefix = None
             if kind == "new":
                 req = self.waiting[idx]
                 prio = req.priority
                 npages = self._pages_needed(len(req.prompt),
                                             req.max_new_tokens)
+                if self.ecfg.prefix_cache:
+                    prefix = self._probe_prefix(req)
+                    npages -= len(prefix.shared)
             else:
                 rec = self.preempted[idx]
                 prio = rec.st.req.priority
@@ -633,16 +736,20 @@ class StemEngine:
             slot = self._free_slot()
             if slot is None:
                 if not self._try_preempt_for(prio, npages):
+                    self._release_prefix(prefix)
                     return                  # slot-blocked — head-of-line waits
                 slot = self._free_slot()
             pages, denied = self._try_alloc(npages, restore=(kind == "pre"))
             if denied:
+                self._release_prefix(prefix)
                 return                      # transient exhaustion — retry later
             while pages is None:
                 if not self._try_preempt_for(prio, npages):
+                    self._release_prefix(prefix)
                     return                  # memory-blocked — head-of-line waits
                 pages, denied = self._try_alloc(npages, restore=(kind == "pre"))
                 if denied:
+                    self._release_prefix(prefix)
                     return
             if kind == "pre":
                 del self.preempted[idx]
@@ -650,21 +757,26 @@ class StemEngine:
                     return                  # restore failed — handled inside
                 continue
             del self.waiting[idx]
-            self._admit_new(req, slot, pages)
+            self._admit_new(req, slot, pages, prefix)
 
-    def _admit_new(self, req: Request, slot: int, pages: list) -> None:
+    def _admit_new(self, req: Request, slot: int, pages: list,
+                   prefix: Optional[_PrefixMatch] = None) -> None:
         plen = len(req.prompt)
-        npages = len(pages)
         npages_prompt = -(-plen // self.page_size)
         padded_len = npages_prompt * self.page_size
-        # Full reservation, trash-padded.
+        shared = list(prefix.shared) if prefix else []
+        n_share = len(shared)
+        all_pages = shared + list(pages)
+        # Full reservation, trash-padded: shared prefix pages first (the
+        # page table is position-ordered), then the private allocation.
         row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
-        row[:npages] = pages
+        row[:len(all_pages)] = all_pages
         if self._slot_ever_used[slot]:
             self.stats["slots_reused"] += 1
         self._slot_ever_used[slot] = True
         self.page_table[slot] = row
-        self.slot_pages[slot] = pages
+        self.slot_pages[slot] = all_pages
+        self.slot_nshared[slot] = n_share
         now = time.perf_counter()
         arrival = self._arrival_t.get(req.uid, now)
 
@@ -694,17 +806,44 @@ class StemEngine:
                 self._recycle(slot)
             return
 
-        # Chunked: reset the reservation to pristine (recycled pages are
-        # dirty; chunk writes + decode increments assume fresh pages),
-        # park the slot mid-prefill with a prefill_pos cursor.
-        self.pools = self._reset(self.pools, jnp.asarray(row))
+        # Chunked: reset the PRIVATE reservation to pristine (recycled
+        # pages are dirty; chunk writes + decode increments assume fresh
+        # pages).  Shared prefix pages carry live canonical contents and
+        # must NOT be reset.  The reset row is the same fixed trash-padded
+        # width either way — no new traces.
+        fresh_row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
+        fresh_row[:len(pages)] = pages
+        self.pools = self._reset(self.pools, jnp.asarray(fresh_row))
+        if prefix and prefix.cow:
+            # Copy-on-write: a fully-matched exact-page-multiple prompt
+            # still replays its final page (first-token logits), and the
+            # replay chunk REWRITES that page — so the matched page's
+            # contents are copied into the private page at table index
+            # n_share and the probe's pin on the original is dropped.
+            src = prefix.cow[0]
+            dst = pages[0]
+            self.pools = self._page_copy(self.pools,
+                                         jnp.asarray(src, jnp.int32),
+                                         jnp.asarray(dst, jnp.int32))
+            self.allocator.free([src])
+            self.allocator.cows += 1      # private dst came from the bulk
+                                          # alloc, not allocator.cow()
+            self.stats["prefix_cows"] += 1
+        if prefix and (prefix.shared or prefix.cow):
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_pages_shared"] += n_share
         ptoks = np.zeros((padded_len,), np.int32)
         ptoks[:plen] = req.prompt
         self.cache_lens[slot] = 0
+        # The prefill cursor starts past the matched prefix: only the
+        # unmatched suffix (always >= one page — the last-token page is
+        # replayed) flows through the chunk lane.
         self.slots[slot] = _SlotState(
             req=req, tokens=[], admitted_step=self.step_count,
-            admit_t=now, arrival_t=arrival, phase="prefill", prefill_pos=0,
-            padded=ptoks, true_len=plen, last_sched_step=self.step_count)
+            admit_t=now, arrival_t=arrival, phase="prefill",
+            prefill_pos=n_share * self.page_size,
+            padded=ptoks, true_len=plen, last_sched_step=self.step_count,
+            prefix_keys=list(prefix.keys) if prefix else [])
 
     def _is_finished(self, st: _SlotState) -> bool:
         if len(st.tokens) >= st.req.max_new_tokens:
@@ -724,10 +863,14 @@ class StemEngine:
             token_latencies_s=st.token_latencies_s,
             priority=st.req.priority, preemptions=st.preemptions,
             queue_s=st.admit_t - st.arrival_t))
+        # Shared refs decrement (co-tenants keep the pages); a registered
+        # page at ref 0 parks in the allocator's cached set, contents
+        # intact, so the NEXT tenant with this prefix still hits.
         self.allocator.free(self.slot_pages[slot])
         self.page_table[slot] = 0
         self.cache_lens[slot] = 0
         self.slot_pages[slot] = None
+        self.slot_nshared[slot] = 0
         self.slots[slot] = None
 
     def _decode_key(self, s: int, now: float):
@@ -891,6 +1034,13 @@ class StemEngine:
                 st.tokens = [int(np.argmax(chunk_logits[lane]))]
                 st.phase = "decode"
                 self.cache_lens[s] = st.true_len
+                if st.prefix_keys:
+                    # Contents of every full prompt page are now final —
+                    # content-address them for future tenants (idempotent
+                    # for pages this request itself shared; the partial
+                    # tail page has no key and stays private).
+                    for j, key in enumerate(st.prefix_keys):
+                        self.allocator.register(self.slot_pages[s][j], key)
                 st.first_token_t = st.last_token_t = now
                 st.ttft_s = now - st.arrival_t
                 self.stats["prefills"] += 1

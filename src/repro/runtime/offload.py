@@ -17,6 +17,14 @@ with a fixed-width ``(max_pages_per_slot,)`` page-id row padded with the
 trash page, so the engine jits each exactly once
 (``launch/steps.make_page_extract`` / ``make_page_restore``).  Padding
 slots gather/scatter the trash page, which holds garbage by design.
+
+Prefix caching changes WHAT is snapshotted, not how: a preempted request's
+prefix-SHARED pages are never gathered or scattered — their contents stay
+on the device (co-tenants may be reading them) and the engine keeps one
+pinned allocator reference per shared page for the duration of the
+offload.  Only the privately-held suffix/decode pages round-trip through
+this store; ``put(..., pinned=...)`` records the pinned ids per request so
+the residency accounting stays honest.
 """
 from __future__ import annotations
 
@@ -87,6 +95,7 @@ class HostPageStore:
 
     def __init__(self):
         self._store: dict = {}
+        self._pinned: dict = {}      # uid -> device pages pinned, not copied
         self.nbytes = 0
         self.peak_nbytes = 0
         self.total_offloads = 0
@@ -97,11 +106,16 @@ class HostPageStore:
     def __contains__(self, uid) -> bool:
         return uid in self._store
 
-    def put(self, uid, snapshot) -> None:
+    def put(self, uid, snapshot, pinned=()) -> None:
+        """Store a request's private-page snapshot.  ``pinned`` lists the
+        prefix-shared device pages that stay resident on the device (the
+        engine holds one allocator reference each) — recorded for
+        observability, no bytes copied."""
         if uid in self._store:
             raise ValueError(f"request {uid} already offloaded")
         host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), snapshot)
         self._store[uid] = host
+        self._pinned[uid] = list(pinned)
         self.nbytes += snapshot_nbytes(host)
         self.peak_nbytes = max(self.peak_nbytes, self.nbytes)
         self.total_offloads += 1
@@ -109,8 +123,13 @@ class HostPageStore:
     def get(self, uid):
         return self._store[uid]
 
+    def pinned(self, uid) -> list:
+        """Device pages this offloaded request keeps pinned (shared prefix)."""
+        return list(self._pinned.get(uid, ()))
+
     def pop(self, uid):
         snap = self._store.pop(uid)
+        self._pinned.pop(uid, None)
         self.nbytes -= snapshot_nbytes(snap)
         return snap
 

@@ -26,10 +26,13 @@ makes admission/recycling a pure host-side page-table edit.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import Counter, OrderedDict
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import decode as decode_lib
 from repro.core import metric as metric_lib
@@ -127,6 +130,55 @@ def reset_pools_stacked(pools, page_ids: jnp.ndarray):
 
     return jax.tree.map(one, pools,
                         is_leaf=lambda x: isinstance(x, PagePool))
+
+
+def copy_pages_stacked(pools, src: jnp.ndarray, dst: jnp.ndarray):
+    """Copy one page's full contents (K/V + kg/vm summaries) ``src`` -> ``dst``
+    across every layer's pool — the device half of copy-on-write.  A write
+    into a prefix-shared page first redirects the writer to a fresh page via
+    ``PageAllocator.cow``; this op then duplicates the shared contents so the
+    writer's view is unchanged while other tenants keep the original.
+
+    src, dst: scalar global page ids (static or traced int32)."""
+    def one(pool: PagePool) -> PagePool:
+        return PagePool(
+            k=pool.k.at[:, :, dst].set(pool.k[:, :, src]),
+            v=pool.v.at[:, :, dst].set(pool.v[:, :, src]),
+            kg=pool.kg.at[:, :, dst].set(pool.kg[:, :, src]),
+            vm=pool.vm.at[:, :, dst].set(pool.vm[:, :, src]),
+        )
+
+    return jax.tree.map(one, pools,
+                        is_leaf=lambda x: isinstance(x, PagePool))
+
+
+def prefix_page_keys(tokens, budgets, page_size: int) -> list:
+    """Chained content keys for every FULL page of a prompt.
+
+    Page j's K/V (and summaries) at layer l>0 depend on the *entire* token
+    prefix up to page j — not just page j's tokens — and chunked prefill's
+    per-row sparsity budgets depend on the prompt's padded length (the TPD
+    schedule allots budget by row position over the whole prompt).  So the
+    key for page j chains: key_j = H(key_{j-1} || tokens[j*bs:(j+1)*bs] ||
+    budget_row_j).  Two tenants share page j iff every token through page j
+    AND every budget row through page j agree — exactly the condition under
+    which the engine's chunked prefill writes bit-identical pages.
+
+    tokens: int sequence (the prompt).  budgets: per-block prefill budget
+    rows for the prompt's padded length (``policy.prefill_budgets``).  The
+    partial tail page (len(tokens) % page_size != 0 remainder) gets no key:
+    it is always privately held.
+    """
+    full = len(tokens) // page_size
+    keys = []
+    h = b"stem-prefix-v1"
+    for j in range(full):
+        page = np.asarray(
+            tokens[j * page_size:(j + 1) * page_size], np.int32).tobytes()
+        row = int(budgets[j]).to_bytes(4, "little")
+        h = hashlib.blake2b(h + page + row, digest_size=16).digest()
+        keys.append(h.hex())
+    return keys
 
 
 def write_chunk_pages(pool: PagePool, page_table: jnp.ndarray,
@@ -279,16 +331,32 @@ def paged_sparse_decode(
 # ---------------------------------------------------------------------------
 
 class PageAllocator:
-    """Free-list page allocator over a fixed pool.  Page 0 (the trash page
-    for inactive slots) is never handed out.
+    """Ref-counted free-list page allocator with a hash-keyed prefix index.
+    Page 0 (the trash page for inactive slots) is never handed out.
 
-    Every page id is in exactly one of two places at all times — the free
-    list or the allocated set — and ``check_conservation`` asserts that
-    partition.  ``evict``/``restore`` are the preemption-facing spellings of
-    ``free``/``alloc``: a victim's pages return to the free list while its
-    contents move to host memory (``runtime/offload.py``), and re-admission
-    draws a fresh (possibly different) set of physical pages to scatter the
-    snapshot back into."""
+    Every page id is in exactly one of THREE places at all times — the free
+    list, the cached set (registered prefix pages at refcount 0, contents
+    retained for future hits, reclaimable LRU-first), or the allocated set
+    (refcount >= 1) — and ``check_conservation`` asserts that partition plus
+    refcount bookkeeping.  ``evict``/``restore`` are the preemption-facing
+    spellings of ``free``/``alloc``: a victim's pages return to the free
+    list while its contents move to host memory (``runtime/offload.py``),
+    and re-admission draws a fresh (possibly different) set of physical
+    pages to scatter the snapshot back into.
+
+    Prefix caching (``runtime/engine.py`` drives this):
+
+    * ``register(page, key)`` content-addresses a full prompt page by its
+      chained hash (``prefix_page_keys``) once its contents are final.
+    * ``probe(key)`` answers admission's per-page lookup; ``share(page)``
+      takes a reference on a hit (reviving a cached page if needed).
+    * ``free`` decrements: a page leaves the allocated set only at ref 0,
+      and a *registered* page then parks in the cached set instead of the
+      free list, so a later tenant with the same prefix still hits.
+    * ``cow(page)`` is the bookkeeping half of copy-on-write: it redirects
+      the caller's reference on a shared page to a freshly allocated private
+      page (the device copy is ``copy_pages_stacked``).
+    """
 
     def __init__(self, num_pages: int):
         if num_pages < 2:
@@ -296,29 +364,123 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, 0, -1))  # pop() -> lowest id
         self._allocated: set = set()
+        self._ref: dict = {}            # page -> live reference count (>= 1)
+        self._index: dict = {}          # prefix key -> page id (injective)
+        self._key_of: dict = {}         # page id -> its prefix key
+        self._cached: OrderedDict = OrderedDict()   # ref-0 registered, LRU
         self.evictions = 0
         self.restores = 0
+        self.total_alloced = 0          # pages handed out, lifetime
+        self.shares = 0                 # references taken via prefix hits
+        self.cows = 0
+        self.cache_reclaims = 0         # cached pages cannibalized by alloc
 
     @property
     def available(self) -> int:
-        return len(self._free)
+        """Pages an ``alloc`` could obtain: truly free plus reclaimable
+        (ref-0 cached prefix pages)."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self._cached)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def alloc(self, n: int) -> Optional[list]:
-        """Return n page ids, or None (allocation is all-or-nothing)."""
-        if n > len(self._free):
+        """Return n page ids at refcount 1, or None (all-or-nothing).
+        Draws from the free list first, then reclaims cached prefix pages
+        LRU-first (unregistering them — their contents are gone)."""
+        if n > self.available:
             return None
-        pages = [self._free.pop() for _ in range(n)]
+        pages = []
+        for _ in range(n):
+            if self._free:
+                p = self._free.pop()
+            else:
+                p, _ = self._cached.popitem(last=False)
+                self._unregister(p)
+                self.cache_reclaims += 1
+            pages.append(p)
+            self._ref[p] = 1
         self._allocated.update(pages)
+        self.total_alloced += n
         return pages
 
     def free(self, pages) -> None:
+        """Drop one reference per listed page.  A page leaves the allocated
+        set only when its refcount hits 0; registered pages then park in the
+        cached set (contents retained for prefix hits), others return to the
+        free list."""
         for p in pages:
             if not (0 < p < self.num_pages):
                 raise ValueError(f"bad page id {p}")
             if p not in self._allocated:
                 raise ValueError(f"double free of page {p}")
+            self._ref[p] -= 1
+            if self._ref[p] > 0:
+                continue
+            del self._ref[p]
             self._allocated.discard(p)
-            self._free.append(p)
+            if p in self._key_of:
+                self._cached[p] = None          # most-recently-used end
+            else:
+                self._free.append(p)
+
+    def probe(self, key) -> Optional[int]:
+        """Page currently holding the content addressed by ``key`` (live or
+        cached), or None.  Probing does NOT pin — callers must ``share``
+        every hit before any ``alloc`` that could reclaim a cached page."""
+        return self._index.get(key)
+
+    def share(self, page: int) -> int:
+        """Take one reference on an indexed page (a prefix-cache hit).  A
+        cached (ref-0) page is revived into the allocated set."""
+        if page in self._cached:
+            del self._cached[page]
+            self._allocated.add(page)
+            self._ref[page] = 1
+        elif page in self._allocated:
+            self._ref[page] += 1
+        else:
+            raise ValueError(f"page {page} is neither allocated nor cached")
+        self.shares += 1
+        return page
+
+    def register(self, page: int, key) -> None:
+        """Content-address an allocated page under ``key``.  First writer
+        wins: if an equivalent page is already canonical for the key the
+        call is a no-op (both pages hold identical contents; the newcomer
+        stays an ordinary private page)."""
+        if page not in self._allocated:
+            raise ValueError(f"cannot register unallocated page {page}")
+        old = self._key_of.get(page)
+        if old == key:
+            return
+        if key in self._index:
+            return
+        if old is not None:
+            del self._index[old]
+        self._index[key] = page
+        self._key_of[page] = key
+
+    def cow(self, page: int) -> Optional[int]:
+        """Copy-on-write bookkeeping: exchange the caller's reference on a
+        shared page for a fresh private page (all-or-nothing; None if no
+        page is available, caller's reference untouched).  The caller then
+        copies device contents via ``copy_pages_stacked``."""
+        fresh = self.alloc(1)
+        if fresh is None:
+            return None
+        self.free([page])
+        self.cows += 1
+        return fresh[0]
+
+    def _unregister(self, page: int) -> None:
+        key = self._key_of.pop(page, None)
+        if key is not None and self._index.get(key) == page:
+            del self._index[key]
 
     def evict(self, pages) -> None:
         """Free a preemption victim's pages (contents live on in the host
@@ -335,27 +497,56 @@ class PageAllocator:
         return pages
 
     def check_conservation(self, held=None) -> bool:
-        """Assert free-list/allocated-set conservation: together they
-        partition pages 1..num_pages-1 with no duplicates or overlap.  With
-        ``held`` (the page ids the caller believes are live, e.g. the
-        engine's slot_pages), additionally assert the allocated set matches
-        — no orphaned pages after any recycle/preempt/restore path."""
+        """Assert the three-way partition: free list, cached set and
+        allocated set are disjoint and together cover pages 1..num_pages-1;
+        every allocated page has a refcount >= 1, every cached page is
+        registered, and the prefix index is consistent.  With ``held`` (a
+        MULTISET of page ids — one entry per live reference the caller
+        believes it holds, e.g. slot_pages plus preempted pins), the
+        per-page counts must equal the refcounts exactly — no orphaned pages
+        or leaked references after any recycle/preempt/restore/share path."""
         free = set(self._free)
         if len(free) != len(self._free):
             raise AssertionError("duplicate page ids in the free list")
-        if free & self._allocated:
-            raise AssertionError(
-                f"pages both free and allocated: {sorted(free & self._allocated)}")
+        cached = set(self._cached)
+        parts = [("free", free), ("cached", cached),
+                 ("allocated", self._allocated)]
+        for i in range(len(parts)):
+            for j in range(i + 1, len(parts)):
+                (na, a), (nb, b) = parts[i], parts[j]
+                if a & b:
+                    raise AssertionError(
+                        f"pages both {na} and {nb}: {sorted(a & b)}")
         universe = set(range(1, self.num_pages))
-        if free | self._allocated != universe:
-            lost = sorted(universe - free - self._allocated)
-            raise AssertionError(f"orphaned pages (neither free nor "
+        if free | cached | self._allocated != universe:
+            lost = sorted(universe - free - cached - self._allocated)
+            raise AssertionError(f"orphaned pages (neither free, cached nor "
                                  f"allocated): {lost}")
-        if held is not None:
-            held = set(held)
-            if held != self._allocated:
+        if set(self._ref) != self._allocated:
+            raise AssertionError(
+                f"refcount table out of sync with allocated set: "
+                f"refs {sorted(self._ref)} vs {sorted(self._allocated)}")
+        if any(r < 1 for r in self._ref.values()):
+            bad = {p: r for p, r in self._ref.items() if r < 1}
+            raise AssertionError(f"allocated pages with refcount < 1: {bad}")
+        for p in cached:
+            if p not in self._key_of:
+                raise AssertionError(f"cached page {p} has no prefix key")
+        for key, p in self._index.items():
+            if self._key_of.get(p) != key:
                 raise AssertionError(
-                    f"allocator/holder mismatch: allocated-but-unheld "
-                    f"{sorted(self._allocated - held)}, held-but-unallocated "
-                    f"{sorted(held - self._allocated)}")
+                    f"prefix index out of sync: key {key!r} -> page {p} but "
+                    f"page maps to {self._key_of.get(p)!r}")
+            if p in free:
+                raise AssertionError(f"indexed page {p} is on the free list")
+        if held is not None:
+            counts = dict(Counter(held))
+            if counts != self._ref:
+                over = {p: c for p, c in counts.items()
+                        if c != self._ref.get(p, 0)}
+                under = {p: r for p, r in self._ref.items()
+                         if r != counts.get(p, 0)}
+                raise AssertionError(
+                    f"allocator/holder refcount mismatch: held {over} vs "
+                    f"allocated {under}")
         return True

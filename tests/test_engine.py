@@ -20,9 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import policy as policy_lib
 from repro.core.config import StemConfig
 from repro.core.decode import summarize_cache
-from repro.models import registry
+from repro.launch import steps as steps_lib
+from repro.models import registry, transformer
 from repro.runtime.engine import EngineConfig, Request, StemEngine
 from repro.runtime.paged import (PageAllocator, append_token, init_pool,
                                  write_prefill_pages)
@@ -243,6 +245,129 @@ def test_append_token_matches_prefill_pages():
     np.testing.assert_allclose(
         np.asarray(grow.vm[:, page_ids]), np.asarray(ref.v_mag[0]),
         rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Cross-policy serving differential: paged engine == fixed-batch decode
+# ---------------------------------------------------------------------------
+
+def _fixed_batch_tokens(bundle, params, pol, prompt, mnt,
+                        return_caches=False):
+    """Reference arm: monolithic contiguous-cache prefill + policy-sparse
+    per-step decode (``apply_decode`` re-summarizing the whole cache), no
+    paging, no chunking, no engine.  Greedy stream of ``mnt`` tokens."""
+    plen = len(prompt)
+    bs = pol.block_size
+    max_len = -(-(plen + mnt) // bs) * bs         # sparse decode needs L % bs == 0
+    # Pad the prompt to a page multiple, exactly like the engine: TPD
+    # prefill budgets are evaluated at the PADDED length, so an unpadded
+    # prefill would select different blocks and break bit-equality.
+    lp = -(-plen // bs) * bs
+    toks = np.zeros((1, lp), np.int32)
+    toks[0, :plen] = prompt
+    prefill = jax.jit(lambda p, b, last: bundle.prefill(
+        p, b, max_len=max_len, stem_cfg=pol, last_pos=last))
+    serve = jax.jit(steps_lib.make_serve_step(bundle, stem_cfg=pol,
+                                              budget_frac=1.0))
+    logits, caches = prefill(params, {"tokens": jnp.asarray(toks)},
+                             jnp.asarray([plen - 1]))
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    out = [int(tok[0, 0])]
+    cache_lens = jnp.asarray([plen])
+    for i in range(mnt - 1):
+        logits, caches = serve(params, tok, caches,
+                               cache_lens if i == 0 else None)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(int(tok[0, 0]))
+    if return_caches:
+        return out, caches
+    return out
+
+
+CROSS_POLICIES = ["stem", "stem-sam", "uniform-sam", "streaming", "dense"]
+
+
+@pytest.mark.parametrize("policy_name", CROSS_POLICIES)
+def test_cross_policy_engine_matches_fixed_batch(built, policy_name):
+    """The paged continuous-batching engine and the monolithic fixed-batch
+    decode are two implementations of the same math for EVERY registered
+    budget-driven policy family (OAM, SAM, uniform, streaming sink+local,
+    dense): greedy streams must agree token-for-token.  Run at
+    budget_frac=1.0, where each policy's selection is content-independent —
+    the comparison then pins the attention/cache plumbing itself rather
+    than near-tie selection behaviour."""
+    bundle, params = built
+    pol = policy_lib.get_policy(policy_name).with_updates(
+        block_size=8, stride=4, sink_blocks=1, local_blocks=1,
+        min_budget_blocks=2, ignore_missing=True)
+    reqs = _requests()[:3]
+    engine = StemEngine(bundle, params, pol, _ecfg(2, 1.0))
+    finished = engine.run(reqs)
+    assert [f.uid for f in finished] == [0, 1, 2]
+
+    for req, fin in zip(_requests()[:3], finished):
+        ref = _fixed_batch_tokens(bundle, params, pol, req.prompt,
+                                  req.max_new_tokens)
+        assert fin.tokens == ref, (
+            f"policy {policy_name}: paged engine diverged from fixed-batch "
+            f"decode for request {req.uid}")
+
+
+def test_long_decode_matches_fixed_batch(built):
+    """Long-decode regression: >=512 generated tokens through the paged
+    engine (chunked prefill + per-token page appends across ~66 pages) must
+    be bitwise the fixed-batch stream, and the pages' stored K/V and
+    kg/vm summaries must still match a from-scratch ``summarize_cache`` of
+    the reference cache — incremental summary updates may not drift over
+    hundreds of appends."""
+    bundle, params = built
+    rng = np.random.RandomState(29)
+    plen, mnt = 21, 512
+    prompt = rng.randint(0, TINY.vocab_size, size=(plen,)).astype(np.int32)
+    per_slot = -(-(plen + mnt) // STEM.block_size)
+    ecfg = EngineConfig(max_slots=1, num_pages=1 + per_slot,
+                        max_pages_per_slot=per_slot, budget_frac=1.0)
+    engine = StemEngine(bundle, params, STEM, ecfg)
+    engine.submit(Request(uid=0, prompt=prompt, max_new_tokens=mnt))
+    page_row = None
+    while engine.pending:
+        engine.step()
+        if engine.slots[0] is not None:
+            page_row = list(engine.slot_pages[0])
+    fin = engine.finished[0]
+    pol = policy_lib.as_policy(STEM)
+    ref, caches = _fixed_batch_tokens(bundle, params, pol, prompt, mnt,
+                                      return_caches=True)
+    assert fin.tokens == ref, "long decode drifted from fixed-batch"
+
+    # The drained slot's pages still hold the request's K/V and summaries
+    # (pages are only reset on reuse).  Compare every FULL page against the
+    # reference cache and a batch re-summarization of it.
+    bs = pol.block_size
+    L = plen + mnt - 1                  # final token is never fed back
+    nfull = L // bs
+    pages = np.asarray(page_row[:nfull])
+    for si, (n, kinds) in enumerate(transformer.layer_program(TINY)):
+        for i, _ in enumerate(kinds):
+            pool = engine.pools[si][f"sub{i}"]
+            cache = caches[si][f"sub{i}"]
+            ck = np.asarray(cache.k)[:, 0, :, :nfull * bs, :]
+            cv = np.asarray(cache.v)[:, 0, :, :nfull * bs, :]
+            got_k = np.asarray(pool.k)[:, :, pages].reshape(ck.shape)
+            got_v = np.asarray(pool.v)[:, :, pages].reshape(cv.shape)
+            np.testing.assert_allclose(got_k, ck, atol=1e-4, rtol=1e-4)
+            np.testing.assert_allclose(got_v, cv, atol=1e-4, rtol=1e-4)
+            for layer in range(ck.shape[0]):
+                summ = summarize_cache(jnp.asarray(ck[layer])[None],
+                                       jnp.asarray(cv[layer])[None], pol)
+                np.testing.assert_allclose(
+                    np.asarray(pool.kg)[layer][:, pages],
+                    np.asarray(summ.k_groups[0]), atol=1e-4, rtol=1e-4,
+                    err_msg=f"kg drift layer {layer} sub{i}")
+                np.testing.assert_allclose(
+                    np.asarray(pool.vm)[layer][:, pages],
+                    np.asarray(summ.v_mag[0]), atol=1e-4, rtol=1e-4,
+                    err_msg=f"vm drift layer {layer} sub{i}")
 
 
 # ---------------------------------------------------------------------------

@@ -60,14 +60,36 @@ def test_matches_xla_cost_analysis_when_no_loops():
 
 def test_collectives_counted_with_trip_counts():
     """A psum inside a scanned body must be multiplied by the trip count."""
-    import os
     if len(jax.devices()) < 2:
-        pytest.skip("needs >1 host device (run under dryrun flags)")
+        pytest.skip("needs >= 2 devices for a real all-reduce; on CPU set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    trips = 10
+
+    def inner(x, w):
+        def body(c, wi):
+            return jax.lax.psum(jnp.tanh(c @ wi), "data"), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    f = shard_map(inner, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                  check_rep=False)
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((trips, 64, 64), jnp.float32)
+    cost = _cost(f, x, w)
+    assert cost.coll_counts.get("all-reduce", 0) == trips, cost.coll_counts
+    # each iteration all-reduces a (64, 64) f32
+    want_bytes = trips * 64 * 64 * 4
+    assert cost.coll_bytes >= want_bytes * 0.9
 
 
 def test_collectives_visible_in_sharded_grad():
     if len(jax.devices()) < 2:
-        pytest.skip("needs multiple devices")
+        pytest.skip("needs >= 2 devices for a real all-reduce; on CPU set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     from jax.sharding import NamedSharding, PartitionSpec as P
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     ps = NamedSharding(mesh, P())

@@ -1,0 +1,418 @@
+"""Prefix caching with copy-on-write pages (runtime/paged.py + engine.py).
+
+The load-bearing property is the **differential oracle**: prefix caching is
+a pure memory optimisation, so every request's greedy token stream must be
+bitwise identical with the feature on and off — across multi-tenant
+sharing, copy-on-write of a fully-matched page, mid-decode preemption of a
+slot that holds shared (pinned) pages, and slot recycling into the ref-0
+cached set.  Plus allocator-level invariants: the free / cached / allocated
+partition conserves pages under any interleaving of alloc, share, register,
+CoW, evict/restore, and free (property test), the LRU cached set is
+reclaimed oldest-first and its index entries invalidated, and the
+suffix-prefill entry (``prefill_kv_pages_suffix``) reproduces one-shot
+prefill through shared read-only prefix pages.
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to fixed-seed parametrized sampling
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import ArchConfig
+from repro.core.config import StemConfig
+from repro.models import registry, transformer
+from repro.runtime import paged as paged_lib
+from repro.runtime.engine import EngineConfig, Request, StemEngine
+from repro.runtime.paged import PageAllocator, prefix_page_keys
+
+BS = 8
+
+TINY = ArchConfig(
+    name="prefix-tiny", family="dense", num_layers=2, d_model=32,
+    num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+    qk_norm=True, dtype="float32",
+)
+STEM = StemConfig(block_size=BS, sink_blocks=1, local_blocks=1,
+                  min_budget_blocks=2, stride=4)
+
+
+@pytest.fixture(scope="module")
+def built():
+    bundle = registry.build(TINY)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+def _ecfg(max_slots, per_slot, num_pages=None, **kw):
+    return EngineConfig(max_slots=max_slots,
+                        num_pages=num_pages or 1 + max_slots * per_slot,
+                        max_pages_per_slot=per_slot, budget_frac=1.0, **kw)
+
+
+def _run(bundle, params, ecfg, reqs, prefix_cache):
+    engine = StemEngine(bundle, params, STEM,
+                        dataclasses.replace(ecfg, prefix_cache=prefix_cache))
+    finished = engine.run([dataclasses.replace(r) for r in reqs])
+    return engine, {f.uid: f.tokens for f in finished}
+
+
+# ---------------------------------------------------------------------------
+# Differential oracle: on == off, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_shared_system_prompt_differential(built):
+    """Four tenants share one 2-page system prompt with distinct suffixes,
+    staggered so later tenants arrive after the first prefill registered its
+    pages.  Token streams must be bitwise identical to the prefix-cache-off
+    run, sharing must actually have happened, and every page must come home
+    at drain (shared refs decremented, not double-freed)."""
+    bundle, params = built
+    rng = np.random.RandomState(42)
+    system = rng.randint(0, TINY.vocab_size, size=(2 * BS,)).astype(np.int32)
+    reqs = []
+    for uid, (suf, mnt, arr) in enumerate([(5, 4, 0), (7, 5, 0),
+                                           (3, 4, 6), (9, 3, 8)]):
+        suffix = rng.randint(0, TINY.vocab_size, size=(suf,)).astype(np.int32)
+        reqs.append(Request(uid=uid, prompt=np.concatenate([system, suffix]),
+                            max_new_tokens=mnt, arrival_step=arr))
+    per_slot = -(-max(len(r.prompt) + r.max_new_tokens for r in reqs) // BS)
+    ecfg = _ecfg(2, per_slot)
+
+    e_off, t_off = _run(bundle, params, ecfg, reqs, False)
+    e_on, t_on = _run(bundle, params, ecfg, reqs, True)
+
+    assert t_on == t_off, "prefix caching changed a token stream"
+    # 4 tenants / 2 slots with staggered arrivals: at least the two late
+    # arrivals (and the recycled-slot tenants) hit the 2-page prefix.
+    assert e_on.stats["prefix_hits"] >= 2
+    assert e_on.stats["prefix_pages_shared"] >= 4
+    assert e_on.allocator.shares >= e_on.stats["prefix_pages_shared"]
+    # sharing is a real allocation saving
+    assert e_on.allocator.total_alloced < e_off.allocator.total_alloced
+    # the off arm never touches the index
+    assert e_off.stats["prefix_hits"] == 0 and e_off.allocator.shares == 0
+    # drain: no slot held, no page orphaned; registered pages may park in
+    # the ref-0 cached set but stay accounted for.
+    for e in (e_on, e_off):
+        assert all(s is None for s in e.slots)
+        e.allocator.check_conservation([])
+        assert (e.allocator.available == e.ecfg.num_pages - 1)
+
+
+def test_cow_on_fully_matched_prompt(built):
+    """An exact-page-multiple prompt that fully matches the index still
+    replays its final page (the engine needs its last-token logits), so
+    admission maps that page copy-on-write: fresh page, contents copied,
+    shared ref dropped.  Tokens must match the off arm bitwise."""
+    bundle, params = built
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, TINY.vocab_size, size=(2 * BS,)).astype(np.int32)
+    reqs = [Request(uid=0, prompt=prompt, max_new_tokens=4),
+            Request(uid=1, prompt=prompt, max_new_tokens=4)]
+    per_slot = -(-(len(prompt) + 4) // BS)
+    ecfg = _ecfg(1, per_slot, num_pages=1 + 2 * per_slot)
+
+    e_off, t_off = _run(bundle, params, ecfg, reqs, False)
+    e_on, t_on = _run(bundle, params, ecfg, reqs, True)
+
+    assert t_on == t_off
+    assert t_on[0] == t_on[1], "identical prompts, identical greedy streams"
+    assert e_on.stats["prefix_cows"] == 1
+    assert e_on.stats["prefix_hits"] == 1
+    assert e_on.stats["prefix_pages_shared"] == 1   # page 0 shared, page 1 CoW
+    assert e_on.allocator.cows == 1
+    e_on.allocator.check_conservation([])
+
+
+def test_preempt_slot_with_shared_pages(built):
+    """Mid-decode preemption of a slot whose leading pages are SHARED: only
+    the private pages may be offloaded/evicted; the shared pages stay
+    pinned on device and are re-attached at restore.  The stream must stay
+    bitwise identical to (a) the off arm under the same preemption and
+    (b) an unpreempted run."""
+    bundle, params = built
+    rng = np.random.RandomState(5)
+    system = rng.randint(0, TINY.vocab_size, size=(2 * BS,)).astype(np.int32)
+    mk = lambda uid, suf, mnt, arr: Request(
+        uid=uid,
+        prompt=np.concatenate(
+            [system, rng.randint(0, TINY.vocab_size, size=(suf,)).astype(np.int32)]),
+        max_new_tokens=mnt, arrival_step=arr)
+    reqs = [mk(0, 5, 10, 0), mk(1, 7, 10, 4)]
+    per_slot = -(-max(len(r.prompt) + r.max_new_tokens for r in reqs) // BS)
+    ecfg = _ecfg(2, per_slot)
+
+    def run(prefix_cache, do_preempt):
+        e = StemEngine(bundle, params, STEM,
+                       dataclasses.replace(ecfg, prefix_cache=prefix_cache))
+        for r in reqs:
+            e.submit(dataclasses.replace(r))
+        steps = preempted = 0
+        while e.pending:
+            e.step()
+            steps += 1
+            if do_preempt and not preempted and steps >= 8:
+                for s, st_ in enumerate(e.slots):
+                    if st_ is not None and st_.req.uid == 1 \
+                            and st_.phase == "decode":
+                        if prefix_cache:
+                            assert e.slot_nshared[s] == 2, \
+                                "uid 1 should be sharing the system pages"
+                        e.preempt(s)
+                        preempted = 1
+                        break
+            assert steps < 500, "engine failed to drain"
+        if do_preempt:
+            assert preempted, "never caught uid 1 mid-decode"
+        return e, {f.uid: f.tokens for f in e.finished}
+
+    e_on, t_on = run(True, True)
+    e_off, t_off = run(False, True)
+    _, t_ref = run(False, False)
+    assert t_on == t_off == t_ref, \
+        "preempting a sharing slot changed its token stream"
+    assert e_on.stats["preemptions"] >= 1
+    assert e_on.stats["prefix_hits"] == 1
+    e_on.allocator.check_conservation([])
+    assert len(e_on.host_store) == 0
+    assert all(s is None for s in e_on.slots)
+
+
+def test_recycled_registration_enables_sequential_sharing(built):
+    """Sequential tenants through ONE slot: the first tenant's registered
+    prompt pages park in the ref-0 cached set at recycle and are revived —
+    not re-prefilled — by the second tenant.  Guards the cached-set
+    half of the partition (a plain free would sever sharing across
+    recycles)."""
+    bundle, params = built
+    rng = np.random.RandomState(11)
+    system = rng.randint(0, TINY.vocab_size, size=(2 * BS,)).astype(np.int32)
+    mk = lambda uid, suf: Request(
+        uid=uid,
+        prompt=np.concatenate(
+            [system, rng.randint(0, TINY.vocab_size, size=(suf,)).astype(np.int32)]),
+        max_new_tokens=3)
+    reqs = [mk(0, 5), mk(1, 6), mk(2, 4)]
+    per_slot = -(-max(len(r.prompt) + r.max_new_tokens for r in reqs) // BS)
+    # ONE slot: tenants strictly sequential, sharing must survive recycling
+    ecfg = _ecfg(1, per_slot, num_pages=1 + 2 * per_slot)
+
+    e_off, t_off = _run(bundle, params, ecfg, reqs, False)
+    e_on, t_on = _run(bundle, params, ecfg, reqs, True)
+    assert t_on == t_off
+    assert e_on.stats["prefix_hits"] == 2          # tenants 1 and 2
+    assert e_on.allocator.cache_reclaims == 0      # pool big enough: revived,
+    assert e_on.stats["prefix_pages_shared"] == 4  # never cannibalised
+    e_on.allocator.check_conservation([])
+
+
+# ---------------------------------------------------------------------------
+# Suffix prefill parity: shared read-only prefix pages
+# ---------------------------------------------------------------------------
+
+def test_suffix_prefill_matches_full_prefill(built):
+    """``prefill_kv_pages_suffix`` over already-written prefix pages must
+    reproduce one-shot ``prefill_kv_pages``: same next-token logits, same
+    page contents and summaries — and it must not write the prefix pages it
+    reads through (they may be shared with other slots)."""
+    bundle, params = built
+    rng = np.random.RandomState(3)
+    plen = 43                                     # partial final page
+    prompt = rng.randint(0, TINY.vocab_size, size=(plen,)).astype(np.int32)
+    npages_prompt = -(-plen // BS)
+    n_reserved = npages_prompt + 1
+    page_row = jnp.arange(1, n_reserved + 1, dtype=jnp.int32)
+    toks = np.zeros((1, npages_prompt * BS), np.int32)
+    toks[0, :plen] = prompt
+    tl = jnp.asarray(plen, jnp.int32)
+
+    pools = transformer.init_page_pools(TINY, 1 + n_reserved + 1, STEM)
+    ref_logits, ref_pools = transformer.prefill_kv_pages(
+        params, jnp.asarray(toks), tl, pools, page_row, TINY, STEM)
+
+    start = 2 * BS                                # 2 matched prefix pages
+    # Poison the private (suffix + spill) pages of the full-prefill result,
+    # then reset them — exactly the engine's admission path, which must not
+    # touch the shared prefix pages.
+    private = page_row[start // BS:]
+    poisoned = jax.tree.map(
+        lambda p: paged_lib.PagePool(k=p.k + 7.0, v=p.v - 7.0,
+                                     kg=p.kg + 7.0, vm=p.vm + 7.0)
+        if isinstance(p, paged_lib.PagePool) else p,
+        ref_pools, is_leaf=lambda x: isinstance(x, paged_lib.PagePool))
+    # restore the shared prefix pages from the reference (they are mapped
+    # read-only; the suffix pass may not rewrite them)
+    shared = page_row[:start // BS]
+    merged = jax.tree.map(
+        lambda pz, rf: paged_lib.PagePool(
+            k=pz.k.at[:, :, shared].set(rf.k[:, :, shared]),
+            v=pz.v.at[:, :, shared].set(rf.v[:, :, shared]),
+            kg=pz.kg.at[:, :, shared].set(rf.kg[:, :, shared]),
+            vm=pz.vm.at[:, :, shared].set(rf.vm[:, :, shared])),
+        poisoned, ref_pools,
+        is_leaf=lambda x: isinstance(x, paged_lib.PagePool))
+    merged = paged_lib.reset_pools_stacked(merged, private)
+
+    got_logits, got_pools = transformer.prefill_kv_pages_suffix(
+        params, jnp.asarray(toks), tl, start, merged, page_row, TINY, STEM)
+
+    np.testing.assert_allclose(np.asarray(got_logits), np.asarray(ref_logits),
+                               atol=1e-4, rtol=1e-4)
+    for si in range(len(ref_pools)):
+        for sub in ref_pools[si]:
+            rp, gp = ref_pools[si][sub], got_pools[si][sub]
+            for name in ("k", "v", "kg", "vm"):
+                r = np.asarray(getattr(rp, name))[:, :, page_row]
+                g = np.asarray(getattr(gp, name))[:, :, page_row]
+                np.testing.assert_allclose(g, r, atol=1e-5, rtol=1e-5,
+                                           err_msg=f"{sub}.{name}")
+
+
+def test_suffix_prefill_rejects_misaligned_start(built):
+    bundle, params = built
+    pools = transformer.init_page_pools(TINY, 4, STEM)
+    row = jnp.arange(1, 3, dtype=jnp.int32)
+    toks = jnp.zeros((1, 2 * BS), jnp.int32)
+    with pytest.raises(ValueError, match="block"):
+        transformer.prefill_kv_pages_suffix(
+            params, toks, jnp.asarray(9, jnp.int32), 3, pools, row, TINY, STEM)
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants
+# ---------------------------------------------------------------------------
+
+def test_prefix_page_keys_chain():
+    """Chained hash: a page's key commits to the ENTIRE prefix (tokens and
+    per-page budget rows), never to the page alone — layer-ℓ K/V depend on
+    everything before them."""
+    t = list(range(40))
+    k1 = prefix_page_keys(t, [3, 3, 3, 3, 3], BS)
+    assert len(k1) == 5                       # whole pages only
+    assert prefix_page_keys(t[:39], [3] * 5, BS) == k1[:4]   # tail page unkeyed
+    # same page content, different predecessor -> different key
+    t2 = [99] + t[1:]
+    k2 = prefix_page_keys(t2, [3, 3, 3, 3, 3], BS)
+    assert k1[0] != k2[0] and k1[3] != k2[3]
+    # same tokens, different budget row (padded-length dependence) -> differ
+    k3 = prefix_page_keys(t, [3, 3, 3, 3, 4], BS)
+    assert k3[:4] == k1[:4] and k3[4] != k1[4]
+
+
+def test_cached_lru_reclaim_invalidates_index():
+    """Filling the pool reclaims the ref-0 cached set oldest-first; a
+    reclaimed page's index entry must vanish (probe misses, never a stale
+    hit on a recycled page)."""
+    a = PageAllocator(5)                           # pages 1..4
+    pages = a.alloc(4)
+    keys = prefix_page_keys(list(range(4 * BS)), [1, 1, 1, 1], BS)
+    for p, k in zip(pages, keys):
+        a.register(p, k)
+    a.free(pages[:2])                              # cached, LRU order p0, p1
+    a.free(pages[2:])                              # then p2, p3
+    assert a.available == 4 and a.cached_pages == 4
+    got = a.alloc(3)                               # reclaims 3 oldest
+    assert sorted(got) == sorted(pages[:3])
+    assert a.cache_reclaims == 3
+    for k in keys[:3]:
+        assert a.probe(k) is None, "stale index entry after reclaim"
+    assert a.probe(keys[3]) == pages[3]
+    a.check_conservation(got)
+    # revive the survivor, confirm contents-address still routes to it
+    p = a.share(a.probe(keys[3]))
+    assert p == pages[3] and a.refcount(p) == 1
+    a.check_conservation(got + [p])
+
+
+def test_register_idempotent_first_writer_wins():
+    a = PageAllocator(4)
+    p, q = a.alloc(2)
+    a.register(p, "k1")
+    a.register(p, "k1")                            # idempotent
+    a.register(q, "k1")                            # second writer: no-op
+    assert a.probe("k1") == p
+    a.register(p, "k2")                            # re-key allowed
+    assert a.probe("k1") is None and a.probe("k2") == p
+    with pytest.raises(ValueError):
+        a.register(99, "k3")
+    a.check_conservation([p, q])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), num_pages=st.integers(4, 12),
+       n_ops=st.integers(10, 60))
+def test_refcount_conservation_property(seed, num_pages, n_ops):
+    """Random interleavings of alloc / register / share / CoW /
+    evict+restore / free against a mirror of every outstanding reference:
+    after every op the allocator's free + cached + allocated sets must
+    partition the pool exactly, with refcounts equal to the mirror's
+    multiset.  This is the invariant the engine's admission, preemption,
+    and recycling paths all lean on."""
+    rng = random.Random(seed)
+    a = PageAllocator(num_pages)
+    held = []            # one entry per outstanding reference (multiset)
+    registered = []      # (page, key) we may probe/share
+    evicted = []         # pinned refs surviving a simulated offload
+    serial = 0
+    for _ in range(n_ops):
+        op = rng.choice(("alloc", "free", "register", "share", "cow",
+                         "evict", "restore"))
+        if op == "alloc":
+            n = rng.randint(1, max(1, a.available))
+            got = a.alloc(n)
+            if got is not None:
+                held.extend(got)
+        elif op == "free" and held:
+            p = rng.choice(held)
+            a.free([p])
+            held.remove(p)
+        elif op == "register" and held:
+            p = rng.choice(held)
+            serial += 1
+            key = f"key-{seed}-{serial}"
+            a.register(p, key)
+            registered[:] = [(q, k) for q, k in registered if q != p]
+            registered.append((p, key))
+        elif op == "share" and registered:
+            p, key = rng.choice(registered)
+            hit = a.probe(key)
+            if hit is not None:
+                assert hit == p
+                a.share(hit)
+                held.append(hit)
+        elif op == "cow" and held:
+            # all-or-nothing: on None the caller's reference is untouched
+            p = rng.choice(held)
+            fresh = a.cow(p)
+            if fresh is not None:
+                held.remove(p)
+                held.append(fresh)
+        elif op == "evict" and held:
+            # simulate preemption: a private page is freed (its contents
+            # live on in the host snapshot); restore re-allocates one
+            p = rng.choice(held)
+            a.evict([p])
+            held.remove(p)
+            evicted.append(None)
+        elif op == "restore" and evicted:
+            got = a.restore(1)
+            evicted.pop()
+            if got is not None:
+                held.extend(got)
+        # any alloc/cow/restore above may have reclaimed a cached page —
+        # its index entry must be gone; drop stale mirror rows
+        registered[:] = [(q, k) for q, k in registered if a.probe(k) == q]
+        a.check_conservation(held)
+    # drain everything and confirm the pool is whole again
+    for p in list(held):
+        a.free([p])
+    a.check_conservation([])
+    assert a.available == num_pages - 1

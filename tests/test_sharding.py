@@ -9,8 +9,14 @@ from repro import configs
 from repro.models import registry
 from repro.sharding import rules as rules_lib
 
+# Capability gate: these tests build (2,4) and (2,2,2) meshes, so they need
+# >= 8 devices.  On a plain CPU host run them with the forced host-device
+# flag (CI does, in the "sharding / multi-device" step):
+#   XLA_FLAGS=--xla_force_host_platform_device_count=8 pytest tests/test_sharding.py
 pytestmark = pytest.mark.skipif(
-    len(jax.devices()) < 8, reason="needs host-device mesh (dryrun XLA flags)")
+    len(jax.devices()) < 8,
+    reason="needs >= 8 devices for the (2,4)/(2,2,2) meshes; on CPU set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
 
 
 def _mesh(multi=False):
