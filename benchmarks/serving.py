@@ -236,50 +236,92 @@ def run_chunked_bench(quick: bool) -> dict:
     params = bundle.init_params(jax.random.PRNGKey(0))
     bs = stem_cfg.block_size
     max_slots = 4
-    # Sized so the head-of-line stalls register in the p95: each long
-    # arrival lands amid short decode streams whose total gap count keeps
-    # the stall steps above the 95th percentile.
-    workload_kw = dict(
-        n_short=3,
-        short_prompt=(bs, 3 * bs),
-        short_decode=16 if quick else 24,
-        n_long=4,
-        long_prompt=24 * bs,
-        long_decode=4,
-        long_arrival0=3,
-        long_every=5,
-    )
-    chunk_size = 12 * bs
+    workloads = {
+        # Sized so the head-of-line stalls register in the p95: each long
+        # arrival lands amid short decode streams whose total gap count
+        # keeps the stall steps above the 95th percentile.
+        "mixed": dict(
+            chunk_size=12 * bs,
+            workload_kw=dict(
+                n_short=3,
+                short_prompt=(bs, 3 * bs),
+                short_decode=16 if quick else 24,
+                n_long=4,
+                long_prompt=24 * bs,
+                long_decode=4,
+                long_arrival0=3,
+                long_every=5,
+            )),
+        # Long-context cell (seq >= 8k in full mode): prompts long enough
+        # that a monolithic prefill stalls the decode lane for many steps,
+        # while the chunk lane decodes every unified step — the regime the
+        # fused paged kernels target.  Quick mode shrinks the shape (same
+        # code path) to stay a CI smoke.
+        "longctx": dict(
+            chunk_size=(8 * bs) if quick else 64 * bs,
+            workload_kw=dict(
+                n_short=3,
+                short_prompt=(bs, 3 * bs),
+                short_decode=24 if quick else 96,
+                n_long=1 if quick else 2,
+                long_prompt=(32 * bs) if quick else 8192,
+                long_decode=4,
+                long_arrival0=3,
+                long_every=8,
+            )),
+    }
 
     cells = []
-    for monolithic in (False, True):
-        cell = run_chunked_arm(bundle, params, stem_cfg,
-                               monolithic=monolithic, chunk_size=chunk_size,
-                               max_slots=max_slots, workload_kw=workload_kw)
-        print(f"{cell['arm']:>10}: decode p50 {cell['decode_p50_ms']:.2f} / "
-              f"p95 {cell['decode_p95_ms']:.2f} / max "
-              f"{cell['decode_max_ms']:.2f} ms; long TTFT "
-              f"{cell['long_ttft_ms_mean']:.1f} ms; "
-              f"{cell['throughput_tok_s']:.1f} tok/s; traces "
-              f"{cell['traces']}+{cell['prefill_traces']} prefill",
-              flush=True)
-        cells.append(cell)
-    chunked, mono = cells
+    ratios = {}
+    for wl_name, wl in workloads.items():
+        arm_cells = []
+        for monolithic in (False, True):
+            cell = run_chunked_arm(bundle, params, stem_cfg,
+                                   monolithic=monolithic,
+                                   chunk_size=wl["chunk_size"],
+                                   max_slots=max_slots,
+                                   workload_kw=wl["workload_kw"])
+            cell["workload"] = wl_name
+            print(f"{wl_name:>8}/{cell['arm']:>10}: decode p50 "
+                  f"{cell['decode_p50_ms']:.2f} / p95 "
+                  f"{cell['decode_p95_ms']:.2f} / max "
+                  f"{cell['decode_max_ms']:.2f} ms; long TTFT "
+                  f"{cell['long_ttft_ms_mean']:.1f} ms; "
+                  f"{cell['throughput_tok_s']:.1f} tok/s; traces "
+                  f"{cell['traces']}+{cell['prefill_traces']} prefill",
+                  flush=True)
+            arm_cells.append(cell)
+        chunked, mono = arm_cells
+        ratios[wl_name] = {
+            "p95_speedup_vs_monolithic":
+                mono["decode_p95_ms"] / max(chunked["decode_p95_ms"], 1e-9),
+            "ttft_ratio_vs_monolithic":
+                chunked["long_ttft_ms_mean"]
+                / max(mono["long_ttft_ms_mean"], 1e-9),
+            "throughput_ratio_vs_monolithic":
+                chunked["throughput_tok_s"]
+                / max(mono["throughput_tok_s"], 1e-9),
+        }
+        cells.extend(arm_cells)
     return {
         "benchmark": "serving_chunked",
         "mode": "quick" if quick else "full",
         "backend": jax.default_backend(),
         "arch": cfg.name,
         "block_size": bs,
-        "chunk_size": chunk_size,
         "budget_frac": STEM_BUDGET,
-        "workload": {k: (list(v) if isinstance(v, tuple) else v)
-                     for k, v in workload_kw.items()},
+        "workloads": {
+            name: {"chunk_size": wl["chunk_size"],
+                   **{k: (list(v) if isinstance(v, tuple) else v)
+                      for k, v in wl["workload_kw"].items()}}
+            for name, wl in workloads.items()},
         "cells": cells,
+        "ratios": ratios,
+        # kept for trajectory continuity with pre-longctx reports
         "p95_speedup_vs_monolithic":
-            mono["decode_p95_ms"] / max(chunked["decode_p95_ms"], 1e-9),
+            ratios["mixed"]["p95_speedup_vs_monolithic"],
         "ttft_ratio_vs_monolithic":
-            chunked["long_ttft_ms_mean"] / max(mono["long_ttft_ms_mean"], 1e-9),
+            ratios["mixed"]["ttft_ratio_vs_monolithic"],
     }
 
 
@@ -474,7 +516,7 @@ def run(quick: bool = True):
     chunked = run_chunked_bench(quick)
     for c in chunked["cells"]:
         rows.append((
-            f"serving/chunked/{c['arm']}",
+            f"serving/chunked/{c.get('workload', 'mixed')}/{c['arm']}",
             c["decode_p50_ms"] * 1e3,
             f"p95_ms={c['decode_p95_ms']:.2f};"
             f"ttft_ms={c['long_ttft_ms_mean']:.1f};"

@@ -203,13 +203,34 @@ def chunked_prefill_attention(
     budgets: jnp.ndarray,        # (b, C // block) int32 absolute-row budgets
     policy,
     k_max: int = 0,              # static gather width (0 = max_pages)
+    executor=None,               # paged backend name (None = policy.executor)
 ) -> jnp.ndarray:
     """Policy-sparse prefill attention for one chunk, straight off the page
     pool.  The chunk's own pages must already be written
     (``paged.write_chunk_pages`` runs first in ``attention.apply_chunk_paged``)
     so in-chunk blocks score and gather exactly like history blocks.
-    Returns (b, hq, C, dv).
+    ``executor`` picks the paged backend from the ``core/policy.py``
+    registry — "xla" (the gather oracle below) or "pallas" (the fused
+    kernels in ``kernels/paged_attn.py``).  Returns (b, hq, C, dv).
     """
+    policy = policy_lib.as_policy(policy)
+    spec = policy_lib.get_paged_executor(executor or policy.executor)
+    return spec.chunk_fn(q, pool, page_table, chunk_start, budgets, policy,
+                         k_max)
+
+
+def _chunked_prefill_xla(
+    q: jnp.ndarray,
+    pool,
+    page_table: jnp.ndarray,
+    chunk_start: jnp.ndarray,
+    budgets: jnp.ndarray,
+    policy,
+    k_max: int = 0,
+) -> jnp.ndarray:
+    """The XLA gather backend (and the fused kernel's differential oracle):
+    summary gather -> chunk metric -> selection -> page gather -> masked
+    attend, each a separate inspectable op."""
     policy = policy_lib.as_policy(policy)
     b, hq, c, d = q.shape
     hk = pool.k.shape[0]

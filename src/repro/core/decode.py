@@ -32,6 +32,7 @@ them accept a ``SparsityPolicy``, a registered policy name, or a legacy
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Union
 
 import jax
@@ -43,6 +44,15 @@ from repro.core import policy as policy_lib
 from repro.core.selection import DecodeSelection  # noqa: F401  (re-export)
 
 NEG_INF = -1e30
+# The one shared decode sparsity default.  Every decode entry point
+# (``sparse_decode_attention``, ``select_decode_blocks``,
+# ``runtime.paged.paged_sparse_decode``, ``models.attention.apply_decode*``)
+# reads this constant, so a caller omitting ``budget_frac`` gets the same
+# behaviour on every path: **dense** (1.0) — the safe spelling, since
+# forgetting the knob can cost throughput but never quality.  Sparse serving
+# passes its fraction explicitly (the engine threads
+# ``EngineConfig.budget_frac``).
+DEFAULT_BUDGET_FRAC = 1.0
 # summarize_cache() of an all-zero block yields this v_mag (log of the norm
 # floor); fresh/partial pages are initialized to it so incremental appends
 # reproduce the batch summary exactly.
@@ -94,11 +104,39 @@ def select_decode_blocks(
     m: jnp.ndarray,                       # (b, hk, g, nblk) coarse metric
     cache_lens: jnp.ndarray,              # scalar or (b,) valid prefix
     cfg,
-    budget_frac: float = 0.25,
+    budget_frac: float = DEFAULT_BUDGET_FRAC,
 ) -> DecodeSelection:
     """Policy budget + forced floors + validity, vectorized per row."""
     return policy_lib.as_policy(cfg).decode_select(
         m, cache_lens, budget_frac=budget_frac)
+
+
+def debug_assert_live_rows(sel: DecodeSelection,
+                           context: str = "decode selection") -> None:
+    """Opt-in invariant check (``REPRO_DEBUG_DECODE=1``): every row with a
+    non-empty cache must keep at least one live selected block per head —
+    otherwise its attention output is a *silent zero vector* (see
+    ``attend_selected``).  Normal policies cannot trip this (selectors force
+    sink/local floors and budgets are floored at the forced count), so a
+    failure means a broken schedule/selector composition; checking costs a
+    host callback and is therefore gated behind the env var."""
+    if not os.environ.get("REPRO_DEBUG_DECODE"):
+        return
+
+    has_live = sel.live.any(axis=-1)                     # (b, hk, g)
+    nonempty = sel.n_valid > 0                           # (b,)
+
+    def _check(has_live, nonempty, context=context):
+        bad = np.asarray(nonempty)[:, None, None] & ~np.asarray(has_live)
+        if bad.any():
+            raise AssertionError(
+                f"{context}: rows with a non-empty cache selected zero live "
+                f"blocks at (row, kv_head, group) = "
+                f"{np.argwhere(bad).tolist()}; their attention output will "
+                "be a silent zero vector (schedule/selector produced a zero "
+                "budget with no forced sink/local floor)")
+
+    jax.debug.callback(_check, has_live, nonempty)
 
 
 # ---------------------------------------------------------------------------
@@ -113,7 +151,22 @@ def attend_selected(
     cache_lens: jnp.ndarray,   # scalar or (b,)
     block_size: int,
 ) -> jnp.ndarray:
-    """Masked softmax over the selected blocks only.  Returns (b, hq, 1, dv)."""
+    """Masked softmax over the selected blocks only.  Returns (b, hq, 1, dv).
+
+    **Zero-live-row contract:** a row whose selection carries no live slot
+    (``sel.live`` all False — e.g. ``cache_lens == 0`` trash slots riding in
+    a paged serving batch) softmaxes over an all-``NEG_INF`` score row; the
+    uniform probabilities that produces are then zeroed by the ``keep``
+    mask, so the row returns an **exact zero output vector** — not NaN, not
+    garbage.  The fused Pallas path (``kernels/paged_attn.py``) honors the
+    same contract: its accumulator never runs and the finalize step divides
+    zero by the 1e-20 normalizer floor.  Rows with a *non-empty* cache must
+    always have at least one live slot (selectors force sink/local floors);
+    ``REPRO_DEBUG_DECODE=1`` asserts that invariant via
+    ``debug_assert_live_rows``.  Pinned by
+    tests/test_paged_kernel.py::TestZeroLiveRows on both paths.
+    """
+    debug_assert_live_rows(sel, context="attend_selected")
     b, hq, _, d = q.shape
     hk = gk.shape[1]
     group = hq // hk
@@ -138,7 +191,7 @@ def sparse_decode_attention(
     summary: BlockSummary,
     cache_lens: Union[jnp.ndarray, int],   # scalar or (b,) valid prefixes
     cfg,
-    budget_frac: float = 0.25,
+    budget_frac: float = DEFAULT_BUDGET_FRAC,
 ) -> jnp.ndarray:
     """Policy block selection + exact attention over selected cache blocks.
 

@@ -790,6 +790,60 @@ def available_executors() -> tuple:
 
 
 # ---------------------------------------------------------------------------
+# Paged executor registry (serving decode + chunk lanes; backends registered
+# by runtime/paged.py — "xla", the gather oracle — and kernels/paged_attn.py
+# — "pallas", the fused scalar-prefetch kernels)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedExecutorSpec:
+    """One execution backend for the paged serving attention lanes.
+
+    ``decode_fn(q, pool, page_table, cache_lens, policy, budget_frac)``
+    mirrors ``runtime.paged.paged_sparse_decode``;
+    ``chunk_fn(q, pool, page_table, chunk_start, budgets, policy, k_max)``
+    mirrors ``core.chunked.chunked_prefill_attention``.  Both return the
+    attention output and must be selection-identical to the "xla" oracle
+    (the differential suite in tests/test_paged_kernel.py pins this).
+    """
+
+    decode_fn: Callable
+    chunk_fn: Callable
+
+
+_PAGED_EXECUTORS: dict = {}
+
+
+def register_paged_executor(name: str, *, decode_fn: Callable,
+                            chunk_fn: Callable,
+                            overwrite: bool = False) -> PagedExecutorSpec:
+    return _register(_PAGED_EXECUTORS, "paged executor", name,
+                     PagedExecutorSpec(decode_fn=decode_fn, chunk_fn=chunk_fn),
+                     overwrite)
+
+
+def get_paged_executor(name: str) -> PagedExecutorSpec:
+    """Resolve a paged backend, lazily importing the module that registers
+    it.  Prefill-only executor names (a policy's ``executor`` field may name
+    e.g. "dense", which only exists for the monolithic prefill registry)
+    fall back to the XLA gather oracle — always correct, never fused."""
+    if name not in _PAGED_EXECUTORS:
+        if name == "pallas":
+            from repro.kernels import paged_attn  # noqa: F401 (registers)
+        else:
+            from repro.runtime import paged  # noqa: F401 (registers "xla")
+    if name in _PAGED_EXECUTORS:
+        return _PAGED_EXECUTORS[name]
+    if "xla" not in _PAGED_EXECUTORS:
+        from repro.runtime import paged  # noqa: F401 (registers "xla")
+    return _PAGED_EXECUTORS["xla"]
+
+
+def available_paged_executors() -> tuple:
+    return tuple(sorted(_PAGED_EXECUTORS))
+
+
+# ---------------------------------------------------------------------------
 # Built-in registrations (paper defaults: B=128, mu=0.7, beta=0.2, 4+4
 # sink/local, floor 54 — rescale with .with_updates for small shapes)
 # ---------------------------------------------------------------------------

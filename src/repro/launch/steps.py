@@ -144,7 +144,7 @@ def make_serve_step(bundle: registry.ModelBundle, *, stem_cfg=None,
 
 def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
                       budget_frac: float = 1.0, chunk_k_max: int = 0,
-                      on_trace=None):
+                      executor=None, on_trace=None):
     """The engine's single step: (params, pools, tokens (S,1),
     page_table (S,P), cache_lens (S,), chunk) ->
     (decode logits (S, vocab), chunk logits (S, vocab) | None, pools).
@@ -154,7 +154,9 @@ def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
     engine compiles this **exactly once** for arbitrary prompt lengths —
     the per-length retraces of the old monolithic ``insert_prefill`` are
     gone.  ``chunk=None`` is the decode-only view (one extra trace),
-    used by the legacy monolithic arm.  ``on_trace`` fires as a Python
+    used by the legacy monolithic arm.  ``executor`` picks the paged
+    attention backend ("xla" gather oracle / fused "pallas" kernels; None
+    defers to the policy).  ``on_trace`` fires as a Python
     side effect at trace time — the engine's retrace counter."""
     cfg = bundle.cfg
     transformer.assert_paged_servable(cfg)
@@ -166,7 +168,7 @@ def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
         return transformer.paged_mixed_step(
             params, tokens, pools, page_table, cache_lens, cfg,
             stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=chunk,
-            chunk_k_max=chunk_k_max)
+            chunk_k_max=chunk_k_max, executor=executor)
     return unified_step
 
 

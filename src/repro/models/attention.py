@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import policy as policy_lib
 from repro.core.config import StemConfig
+from repro.core.decode import DEFAULT_BUDGET_FRAC
 from repro.core.sparse_attention import (dense_attention, dense_attention_auto,
                                           sparse_attention)
 from repro.models import common
@@ -168,7 +169,7 @@ def apply_decode(
     window: Optional[int] = None,
     use_rope: bool = True,
     stem_cfg=None,
-    budget_frac: float = 1.0,
+    budget_frac: float = DEFAULT_BUDGET_FRAC,
 ) -> tuple[jnp.ndarray, KVCache]:
     """One decode step against the cache (ring buffer when windowed).
 
@@ -184,6 +185,24 @@ def apply_decode(
     fixed-batch differential reference for every registered policy."""
     pos = cache.pos
     b = x.shape[0]
+    if stem_cfg is not None:
+        # Validate before any projection work: the sparse path summarizes
+        # the cache at block granularity, so its capacity must be a block
+        # multiple.
+        if window is not None:
+            raise NotImplementedError(
+                "policy-sparse decode needs global attention, not windowed")
+        pol = policy_lib.as_policy(stem_cfg)
+        L0 = cache.k.shape[2]
+        if L0 % pol.block_size != 0:
+            raise ValueError(
+                f"policy-sparse decode needs the cache capacity to be a "
+                f"multiple of the policy block size, but cache len {L0} % "
+                f"block {pol.block_size} != 0. Allocate the cache padded to "
+                f"a block/page multiple — ceil(max_len / {pol.block_size}) "
+                f"* {pol.block_size} — as the paged engine does with whole "
+                f"pages (per-row valid lengths may still be ragged; only "
+                f"the buffer capacity must align).")
     rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]      # (1,)|(b,1)
     q, k_new, v_new = _project(params, x, cfg, rope_pos, use_rope=use_rope)
     L = cache.k.shape[2]
@@ -196,16 +215,8 @@ def apply_decode(
         slot_age = posv[:, None] - ((posv[:, None] - jnp.arange(L)[None, :]) % L)
         valid = (slot_age >= 0) & (slot_age > posv[:, None] - L)
     if stem_cfg is not None:
-        if window is not None:
-            raise NotImplementedError(
-                "policy-sparse decode needs global attention, not windowed")
         from repro.core import decode as decode_lib
 
-        pol = policy_lib.as_policy(stem_cfg)
-        if L % pol.block_size != 0:
-            raise ValueError(
-                f"sparse decode needs cache len {L} % block "
-                f"{pol.block_size} == 0")
         summary = decode_lib.summarize_cache(ck, cv, pol)
         o = decode_lib.sparse_decode_attention(
             q, ck, cv, summary, posv + 1, pol, budget_frac=budget_frac)
@@ -234,15 +245,18 @@ def apply_decode_paged(
     cache_lens: jnp.ndarray,         # (slots,) tokens already cached
     stem_cfg,                        # any policy spelling (see apply_full)
     *,
-    budget_frac: float = 1.0,
+    budget_frac: float = DEFAULT_BUDGET_FRAC,
+    executor: Optional[str] = None,  # paged backend (None = policy.executor)
     use_rope: bool = True,
 ):
     """One decode step against the paged Stem KV cache.
 
     Appends the new token's K/V (+ summary increments) to each slot's
     current page, then runs OAM page selection + exact attention over the
-    selected pages only.  ``budget_frac=1.0`` is the dense-equivalent
-    oracle arm (every valid page attends).  Returns (out, new_pool)."""
+    selected pages only.  ``budget_frac=1.0`` (the shared default) is the
+    dense-equivalent oracle arm (every valid page attends).  ``executor``
+    picks the paged backend — "xla" gather oracle or the fused "pallas"
+    kernels.  Returns (out, new_pool)."""
     from repro.runtime import paged as paged_lib
 
     stem_cfg = policy_lib.as_policy(stem_cfg)
@@ -250,7 +264,8 @@ def apply_decode_paged(
     q, k_new, v_new = _project(params, x, cfg, lens[:, None], use_rope=use_rope)
     pool = paged_lib.append_token(pool, page_table, lens, k_new, v_new, stem_cfg)
     o = paged_lib.paged_sparse_decode(q, pool, page_table, lens + 1, stem_cfg,
-                                      budget_frac=budget_frac)
+                                      budget_frac=budget_frac,
+                                      executor=executor)
     out = jnp.einsum("bhsk,hkd->bsd", o.astype(x.dtype), params["wo"])
     return out, pool
 
@@ -267,6 +282,7 @@ def apply_chunk_paged(
     stem_cfg,                        # any policy spelling (see apply_full)
     *,
     k_max: int = 0,                  # static gather width (0 = max_pages)
+    executor: Optional[str] = None,  # paged backend (None = policy.executor)
     use_rope: bool = True,
 ):
     """One chunked-prefill step against the paged Stem KV cache.
@@ -289,7 +305,7 @@ def apply_chunk_paged(
                                        v_new, true_len, stem_cfg)
     o = chunked_lib.chunked_prefill_attention(q, pool, page_table,
                                               chunk_start, budgets, stem_cfg,
-                                              k_max)
+                                              k_max, executor=executor)
     out = jnp.einsum("bhsk,hkd->bsd", o.astype(x.dtype), params["wo"])
     return out, pool
 

@@ -619,7 +619,8 @@ def prefill_kv_pages(params, tokens: jnp.ndarray, true_len: jnp.ndarray,
 def prefill_kv_pages_suffix(params, tokens: jnp.ndarray,
                             true_len: jnp.ndarray, start: int, pools,
                             page_row: jnp.ndarray, cfg: ArchConfig,
-                            stem_cfg, budget_frac: float = 1.0):
+                            stem_cfg, budget_frac: float = 1.0,
+                            executor=None):
     """Prefill ONE request's unmatched suffix against already-written
     prefix pages — the prefix-caching admission entry.
 
@@ -661,7 +662,7 @@ def prefill_kv_pages_suffix(params, tokens: jnp.ndarray,
         params, jnp.zeros((1, 1), jnp.int32), pools,
         jnp.zeros((1, page_row.shape[0]), jnp.int32),
         jnp.zeros((1,), jnp.int32), cfg, stem_cfg=stem_cfg,
-        budget_frac=budget_frac, chunk=chunk)
+        budget_frac=budget_frac, chunk=chunk, executor=executor)
     return chunk_logits[0], new_pools
 
 
@@ -669,7 +670,7 @@ def paged_mixed_step(params, tokens: jnp.ndarray, pools,
                      page_table: jnp.ndarray, cache_lens: jnp.ndarray,
                      cfg: ArchConfig, *, stem_cfg,
                      budget_frac: float = 1.0, chunk=None,
-                     chunk_k_max: int = 0):
+                     chunk_k_max: int = 0, executor=None):
     """One mixed batch of decode tokens + prefill chunks over the page pool.
 
     The unified serving step: every layer processes a decode lane
@@ -719,12 +720,13 @@ def paged_mixed_step(params, tokens: jnp.ndarray, pools,
                     mix_c, pl = attention.apply_chunk_paged(
                         p["attn"], hc, cfg, pl, chunk["page_table"],
                         chunk["start"], chunk["true_len"], chunk["budgets"],
-                        stem_cfg, k_max=chunk_k_max)
+                        stem_cfg, k_max=chunk_k_max, executor=executor)
                     xc = xc + mix_c
                 h = common.rms_norm(x, p["norm1"])
                 mix, pl = attention.apply_decode_paged(
                     p["attn"], h, cfg, pl, page_table,
-                    cache_lens, stem_cfg, budget_frac=budget_frac)
+                    cache_lens, stem_cfg, budget_frac=budget_frac,
+                    executor=executor)
                 x = x + mix
                 new_pool[f"sub{i}"] = pl
 
@@ -758,13 +760,14 @@ def paged_mixed_step(params, tokens: jnp.ndarray, pools,
 def paged_decode_step(params, tokens: jnp.ndarray, pools,
                       page_table: jnp.ndarray, cache_lens: jnp.ndarray,
                       cfg: ArchConfig, *, stem_cfg,
-                      budget_frac: float = 1.0):
+                      budget_frac: float = 1.0, executor=None):
     """One token for every engine slot against the paged Stem KV cache —
     the decode-only view of ``paged_mixed_step`` (kept for direct callers).
     Returns (logits (slots, vocab), new pools)."""
     logits, _, new_pools = paged_mixed_step(
         params, tokens, pools, page_table, cache_lens, cfg,
-        stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=None)
+        stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=None,
+        executor=executor)
     return logits, new_pools
 
 

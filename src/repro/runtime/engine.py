@@ -205,6 +205,10 @@ class EngineConfig:
     num_pages: int = 64
     max_pages_per_slot: int = 16
     budget_frac: float = 1.0      # 1.0 = dense-equivalent oracle arm
+    executor: Optional[str] = None  # paged attention backend: "xla" gather
+                                    # oracle | fused "pallas" kernels
+                                    # (kernels/paged_attn.py); None defers
+                                    # to policy.executor
     eos_id: Optional[int] = None
     chunk_size: Optional[int] = None
     step_token_budget: Optional[int] = None
@@ -394,7 +398,8 @@ class StemEngine:
                    chunked_lib.chunk_budget_bound(self.policy, P))
         self._unified = jax.jit(steps_lib.make_unified_step(
             bundle, stem_cfg=self.policy, budget_frac=ecfg.budget_frac,
-            chunk_k_max=k_bound, on_trace=_count("traces")),
+            chunk_k_max=k_bound, executor=ecfg.executor,
+            on_trace=_count("traces")),
             donate_argnums=(1,))
         self._reset = jax.jit(paged_lib.reset_pools_stacked,
                               donate_argnums=(0,))
@@ -596,6 +601,7 @@ class StemEngine:
             token_latencies_s=st.token_latencies_s,
             priority=st.req.priority, preemptions=st.preemptions,
             queue_s=st.admit_t - st.arrival_t, error=error))
+        self._seq.pop(st.req.uid, None)   # uid may be resubmitted later
 
     def _abort(self, slot: int, error: str) -> None:
         """Terminate an active request with an explicit error; its pages go
@@ -633,6 +639,7 @@ class StemEngine:
                 ttft_s=float("nan"), tpot_s=float("nan"),
                 token_latencies_s=[], priority=req.priority,
                 error=f"shed: waiting queue exceeded max_waiting={lim}"))
+            self._seq.pop(req.uid, None)
             self.stats["shed"] += 1
 
     def _lowest_priority_active(self) -> Optional[int]:
@@ -863,6 +870,10 @@ class StemEngine:
             token_latencies_s=st.token_latencies_s,
             priority=st.req.priority, preemptions=st.preemptions,
             queue_s=st.admit_t - st.arrival_t))
+        # Retire the uid: submission order only matters while the request is
+        # schedulable, and benchmarks legitimately replay a trace (same
+        # uids) against a warmed engine.
+        self._seq.pop(st.req.uid, None)
         # Shared refs decrement (co-tenants keep the pages); a registered
         # page at ref 0 parks in the allocator's cached set, contents
         # intact, so the NEXT tenant with this prefix still hits.

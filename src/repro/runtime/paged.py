@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import chunked as chunked_lib
 from repro.core import decode as decode_lib
 from repro.core import metric as metric_lib
 from repro.core import policy as policy_lib
@@ -285,17 +286,38 @@ def paged_sparse_decode(
     page_table: jnp.ndarray,    # (slots, max_pages) global page ids
     cache_lens: jnp.ndarray,    # (slots,) valid tokens per slot
     cfg,
-    budget_frac: float = 0.25,
+    budget_frac: float = decode_lib.DEFAULT_BUDGET_FRAC,
+    executor: Optional[str] = None,
 ) -> jnp.ndarray:
     """Policy-sparse decode attention straight off the page pool.
 
     Identical math to ``core.decode.sparse_decode_attention`` over the
-    logical (page-table-ordered) cache: summaries are gathered per slot via
-    the page table, the policy's metric + budget rule select *logical* page
-    slots per row, and only the selected pages are fetched from the pool.
-    At ``budget_frac=1.0`` (top-k selector) this equals dense decode over
-    each slot's prefix.  A metric registered once in ``core/policy.py``
-    therefore serves the engine with no paged-specific code.
+    logical (page-table-ordered) cache.  At ``budget_frac=1.0`` (top-k
+    selector, the shared default) this equals dense decode over each slot's
+    prefix.  ``executor`` picks the paged backend from the
+    ``core/policy.py`` registry — "xla" (the gather oracle below) or
+    "pallas" (the fused scalar-prefetch kernels in
+    ``kernels/paged_attn.py``); None defers to ``policy.executor``.
+    """
+    cfg = policy_lib.as_policy(cfg)
+    spec = policy_lib.get_paged_executor(executor or cfg.executor)
+    return spec.decode_fn(q, pool, page_table, cache_lens, cfg, budget_frac)
+
+
+def _paged_decode_xla(
+    q: jnp.ndarray,
+    pool: PagePool,
+    page_table: jnp.ndarray,
+    cache_lens: jnp.ndarray,
+    cfg,
+    budget_frac: float,
+) -> jnp.ndarray:
+    """The XLA gather backend: summaries are gathered per slot via the page
+    table, the policy's metric + budget rule select *logical* page slots per
+    row, and only the selected pages are fetched from the pool.  Kept as the
+    differential oracle for the fused kernel (and the CPU-friendly default):
+    every stage is a separate inspectable XLA op.  A metric registered once
+    in ``core/policy.py`` serves the engine with no paged-specific code.
     """
     cfg = policy_lib.as_policy(cfg)
     b, hq, _, d = q.shape
@@ -324,6 +346,13 @@ def paged_sparse_decode(
     gk, gv = jax.vmap(fetch, in_axes=(0, 0, 1), out_axes=1)(
         pool.k, pool.v, gp)                                 # (b,hk,g,kmax,bs,d)
     return decode_lib.attend_selected(q, gk, gv, sel, cache_lens, bs)
+
+
+# The gather oracle is the registry's "xla" backend for both serving lanes
+# (kernels/paged_attn.py registers "pallas").
+policy_lib.register_paged_executor(
+    "xla", decode_fn=_paged_decode_xla,
+    chunk_fn=chunked_lib._chunked_prefill_xla)
 
 
 # ---------------------------------------------------------------------------
