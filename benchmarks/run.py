@@ -22,6 +22,10 @@ accuracy benchmarks).  Mapping to the paper:
   prefix_cache.py         prefix-caching A/B: shared system prompt across
                           tenants, pages/TTFT with sharing on vs off
                           (writes BENCH_prefix.json standalone)
+  sharding_scale.py       mesh-sharded serving: dp slot-group weak scaling
+                          + mesh-vs-single-device differentials (needs 8
+                          devices — skips gracefully without; writes
+                          BENCH_sharded.json standalone)
 """
 from __future__ import annotations
 
@@ -32,7 +36,8 @@ import traceback
 def main() -> None:
     from benchmarks import (ablation, cost_model, latency, oam_vs_sam,
                             policy_parity, position_sensitivity, prefix_cache,
-                            ragged_exec, roofline, sensitivity, serving)
+                            ragged_exec, roofline, sensitivity, serving,
+                            sharding_scale)
 
     modules = [
         ("cost_model", cost_model),
@@ -41,6 +46,7 @@ def main() -> None:
         ("serving", serving),
         ("policy_parity", policy_parity),
         ("prefix_cache", prefix_cache),
+        ("sharding_scale", sharding_scale),
         ("oam_vs_sam", oam_vs_sam),
         ("ablation", ablation),
         ("sensitivity", sensitivity),

@@ -805,20 +805,33 @@ class PagedExecutorSpec:
     mirrors ``core.chunked.chunked_prefill_attention``.  Both return the
     attention output and must be selection-identical to the "xla" oracle
     (the differential suite in tests/test_paged_kernel.py pins this).
+
+    ``sharding`` declares the backend's tensor-parallel contract for
+    mesh-sharded serving (``sharding/serving.py``): "kv-head" means both
+    lanes are per-KV-head independent — they read head count from the pool
+    shapes and never reduce across heads — so a shard-local pool slice plus
+    sliced q/k/v is bitwise equivalent to the full run restricted to those
+    heads.  "replicated" marks a backend that must see all heads; tp>1
+    refuses it at engine construction.
     """
 
     decode_fn: Callable
     chunk_fn: Callable
+    sharding: str = "kv-head"
 
 
 _PAGED_EXECUTORS: dict = {}
 
 
 def register_paged_executor(name: str, *, decode_fn: Callable,
-                            chunk_fn: Callable,
+                            chunk_fn: Callable, sharding: str = "kv-head",
                             overwrite: bool = False) -> PagedExecutorSpec:
+    if sharding not in ("kv-head", "replicated"):
+        raise ValueError(f"sharding must be 'kv-head' or 'replicated', "
+                         f"got {sharding!r}")
     return _register(_PAGED_EXECUTORS, "paged executor", name,
-                     PagedExecutorSpec(decode_fn=decode_fn, chunk_fn=chunk_fn),
+                     PagedExecutorSpec(decode_fn=decode_fn, chunk_fn=chunk_fn,
+                                       sharding=sharding),
                      overwrite)
 
 

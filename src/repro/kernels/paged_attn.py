@@ -455,5 +455,8 @@ def fused_paged_chunk(q, pool, page_table, chunk_start, budgets, cfg,
     return out.reshape(b, hq, c, -1)
 
 
+# Both fused lanes read head counts from the pool shapes and reduce only
+# within a head, so a shard-local KV-head slice is served unchanged.
 policy_lib.register_paged_executor(
-    "pallas", decode_fn=fused_paged_decode, chunk_fn=fused_paged_chunk)
+    "pallas", decode_fn=fused_paged_decode, chunk_fn=fused_paged_chunk,
+    sharding="kv-head")

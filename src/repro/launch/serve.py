@@ -90,6 +90,13 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
     import jax.numpy as jnp  # noqa: F401  (keeps jax initialized up front)
     from repro.runtime.engine import EngineConfig, StemEngine
 
+    mesh = None
+    if args.mesh:
+        try:
+            dp, tp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(f"--mesh wants 'dp,tp' (got {args.mesh!r})")
+        mesh = (dp, tp)
     ecfg = EngineConfig.for_trace(
         max_slots=args.max_slots, max_prompt=args.max_prompt,
         max_new_tokens=args.decode_tokens, page_size=stem_cfg.block_size,
@@ -98,8 +105,12 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
         step_token_budget=args.step_token_budget or None,
         monolithic_prefill=args.monolithic,
         prefix_cache=args.prefix_cache,
+        prefix_evict=args.prefix_evict,
         scheduler=args.scheduler,
-        max_waiting=args.max_waiting or None)
+        max_waiting=args.max_waiting or None,
+        executor=args.executor or None,
+        mesh=mesh,
+        admission_control=args.admission_control)
     chaos = None
     if args.chaos:
         from repro.runtime.chaos import ChaosConfig, ChaosInjector
@@ -125,6 +136,7 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
         "mode": "engine",
         "prefill": "monolithic" if args.monolithic else "chunked",
         "scheduler": ecfg.scheduler,
+        "mesh": list(mesh) if mesh else None,
         "chunk_size": engine.chunk_size,
         "step_token_budget": engine.token_budget,
         "requests": len(finished),
@@ -296,6 +308,22 @@ def main(argv=None) -> dict:
                     help="TTFT SLO for the high-priority class")
     ap.add_argument("--hp-tpot-slo-ms", type=float, default=50.0,
                     help="TPOT SLO for the high-priority class")
+    ap.add_argument("--mesh", default="",
+                    help="'dp,tp' device mesh: dp-way data-parallel slot "
+                         "groups x tp-way tensor-parallel KV-head sharding "
+                         "of the page pools (needs dp*tp visible devices; "
+                         "empty = single-device)")
+    ap.add_argument("--executor", default="",
+                    help="paged executor to force ('xla' | 'pallas'); empty "
+                         "= policy default")
+    ap.add_argument("--prefix-evict", choices=("lru", "hit-rate"),
+                    default="lru",
+                    help="prefix-cache eviction: 'lru' (default) or "
+                         "'hit-rate' (evict fewest-shares-first, LRU ties)")
+    ap.add_argument("--admission-control", action="store_true",
+                    help="reject waiting requests whose TTFT SLO is "
+                         "infeasible at the measured step time (explicit "
+                         "error instead of a silent SLO miss)")
     ap.add_argument("--chaos", action="store_true",
                     help="inject a fixed fault plan (alloc denial, step "
                          "failure, restore failure) — resilience demo; the "

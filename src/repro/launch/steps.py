@@ -144,7 +144,7 @@ def make_serve_step(bundle: registry.ModelBundle, *, stem_cfg=None,
 
 def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
                       budget_frac: float = 1.0, chunk_k_max: int = 0,
-                      executor=None, on_trace=None):
+                      executor=None, on_trace=None, smesh=None):
     """The engine's single step: (params, pools, tokens (S,1),
     page_table (S,P), cache_lens (S,), chunk) ->
     (decode logits (S, vocab), chunk logits (S, vocab) | None, pools).
@@ -157,18 +157,84 @@ def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
     used by the legacy monolithic arm.  ``executor`` picks the paged
     attention backend ("xla" gather oracle / fused "pallas" kernels; None
     defers to the policy).  ``on_trace`` fires as a Python
-    side effect at trace time — the engine's retrace counter."""
+    side effect at trace time — the engine's retrace counter.
+
+    With ``smesh`` (a ``sharding.serving.ServingMesh``) every batch
+    argument gains a leading slot-group axis — tokens (dp, S, 1),
+    page_table (dp, S, P), cache_lens (dp, S), chunk leaves (dp, ...) —
+    and the step runs under ``shard_map``: each dp shard vmaps the
+    single-device mixed step over its local slot group against its pool
+    slice, and each tp shard computes its KV-head block with one
+    all-gather at the attention output (``sharding/serving.py``).  Still
+    exactly two traces, and bitwise identical per group to the
+    single-device step."""
     cfg = bundle.cfg
     transformer.assert_paged_servable(cfg)
+
+    def mixed_step(params, tokens, pools, page_table, cache_lens, chunk):
+        return transformer.paged_mixed_step(
+            params, tokens, pools, page_table, cache_lens, cfg,
+            stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=chunk,
+            chunk_k_max=chunk_k_max, executor=executor)
+
+    if smesh is None:
+        def unified_step(params, pools, tokens, page_table, cache_lens,
+                         chunk=None):
+            if on_trace is not None:
+                on_trace()
+            return mixed_step(params, tokens, pools, page_table, cache_lens,
+                              chunk)
+        return unified_step
+
+    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding import serving as serving_lib
+
+    POOL = serving_lib.POOL_SPEC
+    GRP = serving_lib.GROUP_SPEC
+    REP = serving_lib.REPLICATED
+
+    # Two shard-mapped bodies (mixed / decode-only) mirror the two engine
+    # traces — chunk=None is a pytree structure change, not a spec change.
+    def _mixed_body(params, pools, tokens, page_table, cache_lens, chunk):
+        def one(pools_g, tokens_g, table_g, lens_g, chunk_g):
+            return mixed_step(params, tokens_g, pools_g, table_g, lens_g,
+                              chunk_g)
+        return jax.vmap(one)(pools, tokens, page_table, cache_lens, chunk)
+
+    def _decode_body(params, pools, tokens, page_table, cache_lens):
+        def one(pools_g, tokens_g, table_g, lens_g):
+            dec, _, new_pools = mixed_step(params, tokens_g, pools_g,
+                                           table_g, lens_g, None)
+            return dec, new_pools
+        return jax.vmap(one)(pools, tokens, page_table, cache_lens)
+
+    # check_rep=False: outputs are bitwise replicated over tp by
+    # construction (full projections + all-gather before wo), which the
+    # replication checker cannot prove through the collectives.
+    smapped_mixed = shard_map(
+        _mixed_body, mesh=smesh.mesh,
+        in_specs=(REP, POOL, GRP, GRP, GRP, GRP),
+        out_specs=(GRP, GRP, POOL), check_rep=False)
+    smapped_decode = shard_map(
+        _decode_body, mesh=smesh.mesh,
+        in_specs=(REP, POOL, GRP, GRP, GRP),
+        out_specs=(GRP, POOL), check_rep=False)
 
     def unified_step(params, pools, tokens, page_table, cache_lens,
                      chunk=None):
         if on_trace is not None:
             on_trace()
-        return transformer.paged_mixed_step(
-            params, tokens, pools, page_table, cache_lens, cfg,
-            stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=chunk,
-            chunk_k_max=chunk_k_max, executor=executor)
+        # The head-sharding context is active while jit traces the
+        # shard_map bodies, turning on the TP slicing inside
+        # models/attention.py for exactly this trace.
+        with serving_lib.head_sharding(smesh.tp):
+            if chunk is None:
+                dec, new_pools = smapped_decode(params, pools, tokens,
+                                                page_table, cache_lens)
+                return dec, None, new_pools
+            return smapped_mixed(params, pools, tokens, page_table,
+                                 cache_lens, chunk)
     return unified_step
 
 

@@ -560,11 +560,15 @@ def assert_paged_servable(cfg: ArchConfig) -> None:
                     f"(arch {cfg.name})")
 
 
-def init_page_pools(cfg: ArchConfig, num_pages: int, stem_cfg):
+def init_page_pools(cfg: ArchConfig, num_pages: int, stem_cfg, smesh=None):
     """Per-layer page pools, stacked along the scan axis like init_caches.
     Every attention layer gets its own (hk, P, page, d) pool; the page
     table (slot -> pages) is shared across layers and lives in the engine.
-    ``stem_cfg`` accepts any policy spelling (page = policy block)."""
+    ``stem_cfg`` accepts any policy spelling (page = policy block).
+
+    With ``smesh`` (a ``sharding.serving.ServingMesh``) every leaf gains a
+    leading slot-group axis and is placed sharded — ``(dp, n, hk, P, ...)``
+    with dp over slot groups and the KV-head axis split over tp."""
     from repro.runtime import paged as paged_lib
 
     stem_cfg = policy_lib.as_policy(stem_cfg)
@@ -577,6 +581,9 @@ def init_page_pools(cfg: ArchConfig, num_pages: int, stem_cfg):
                for i, _ in enumerate(kinds)}
         pools.append(jax.tree.map(
             lambda t: jnp.broadcast_to(t, (n,) + t.shape), one))
+    if smesh is not None:
+        from repro.sharding import serving as serving_lib
+        pools = serving_lib.shard_pools(pools, smesh)
     return pools
 
 

@@ -200,7 +200,26 @@ class EngineConfig:
                              (budget overdraft; liveness under decode
                              saturation).
       ``straggler_threshold``step-time outlier factor for the wired-in
-                             StragglerMonitor (``engine.metrics``)."""
+                             StragglerMonitor (``engine.metrics``).
+
+    Mesh-sharded serving (``sharding/serving.py``):
+      ``mesh``               ``(dp, tp)`` — shard the page pools over a
+                             device mesh: tp splits the KV-head axis
+                             (shard-local selection + attention, one
+                             all-gather at the output projection, bitwise
+                             identical to single-device), dp adds
+                             independent slot groups each with
+                             ``max_slots`` slots and ``num_pages`` pages
+                             driven through the same two traces.  None =
+                             single device (the default, untouched path).
+      ``prefix_evict``       cached prefix-page reclaim order: "lru"
+                             (default) or "hit-rate" (fewest prefix hits
+                             first; ties LRU).
+      ``admission_control``  SLO-aware admission control: reject an
+                             arrived request with an explicit error when
+                             its TTFT SLO is infeasible given the queued
+                             prefill tokens and the chunk-lane capacity
+                             (off by default)."""
     max_slots: int = 4
     num_pages: int = 64
     max_pages_per_slot: int = 16
@@ -221,6 +240,9 @@ class EngineConfig:
     max_restore_retries: int = 2
     chunk_starve_steps: int = 4
     straggler_threshold: float = 3.0
+    mesh: Optional[tuple] = None    # (dp, tp) serving mesh; None = 1 device
+    prefix_evict: str = "lru"       # cached prefix reclaim: lru | hit-rate
+    admission_control: bool = False  # reject-on-infeasible-TTFT at admission
 
     def __post_init__(self):
         if self.scheduler not in ("slo", "fcfs"):
@@ -230,6 +252,19 @@ class EngineConfig:
             raise ValueError(
                 "prefix_cache needs chunked prefill (the matched-prefix "
                 "skip is chunk-granular); disable monolithic_prefill")
+        if self.prefix_evict not in paged_lib.PageAllocator.EVICT_POLICIES:
+            raise ValueError(
+                f"prefix_evict must be one of "
+                f"{paged_lib.PageAllocator.EVICT_POLICIES}, "
+                f"got {self.prefix_evict!r}")
+        if self.mesh is not None:
+            if len(self.mesh) != 2 or any(int(a) < 1 for a in self.mesh):
+                raise ValueError(f"mesh must be (dp >= 1, tp >= 1), "
+                                 f"got {self.mesh!r}")
+            if self.monolithic_prefill:
+                raise ValueError(
+                    "mesh serving runs through the unified chunked step; "
+                    "disable monolithic_prefill")
 
     @classmethod
     def for_trace(cls, *, max_slots: int, max_prompt: int,
@@ -286,6 +321,9 @@ class _Preempted:
     preempt_step: int
     restore_attempts: int = 0
     shared_pages: list = dataclasses.field(default_factory=list)
+    group: int = 0                # slot group — restores are pinned to it
+                                  # (the snapshot's bytes belong to that
+                                  # group's pool shard)
 
 
 @dataclasses.dataclass
@@ -345,14 +383,34 @@ class StemEngine:
             chunked_lib.validate_chunked_policy(self.policy)
 
         S, P = ecfg.max_slots, ecfg.max_pages_per_slot
+        # Serving mesh: dp independent slot groups (flat slot ids
+        # [g*max_slots, (g+1)*max_slots) per group, each with its own
+        # allocator and num_pages pages), tp sharding the KV-head axis of
+        # every pool leaf.  smesh=None is the unchanged single-device path
+        # with one group.
+        self.smesh = None
+        if ecfg.mesh is not None:
+            from repro.sharding import serving as serving_lib
+            dp, tp = (int(a) for a in ecfg.mesh)
+            self.smesh = serving_lib.make_serving_mesh(dp, tp)
+            serving_lib.validate_serving(
+                bundle.cfg, ecfg.executor or self.policy.executor, self.smesh)
+        self.groups = self.smesh.dp if self.smesh else 1
+        self.slots_per_group = S
+        self.total_slots = self.groups * S
+        T = self.total_slots
         self.pools = transformer.init_page_pools(
-            bundle.cfg, ecfg.num_pages, self.policy)
-        self.allocator = paged_lib.PageAllocator(ecfg.num_pages)
-        self.page_table = np.zeros((S, P), np.int32)
-        self.cache_lens = np.zeros((S,), np.int32)
-        self.slot_pages: list = [None] * S     # page ids held by each slot
-        self.slot_nshared = [0] * S            # leading prefix-shared pages
-        self.slots: list = [None] * S          # _SlotState | None
+            bundle.cfg, ecfg.num_pages, self.policy, smesh=self.smesh)
+        self.allocators = [
+            paged_lib.PageAllocator(ecfg.num_pages,
+                                    evict_policy=ecfg.prefix_evict)
+            for _ in range(self.groups)]
+        self.allocator = self.allocators[0]    # single-group alias
+        self.page_table = np.zeros((T, P), np.int32)
+        self.cache_lens = np.zeros((T,), np.int32)
+        self.slot_pages: list = [None] * T     # page ids held by each slot
+        self.slot_nshared = [0] * T            # leading prefix-shared pages
+        self.slots: list = [None] * T          # _SlotState | None
         self.waiting: collections.deque = collections.deque()
         self.preempted: list = []              # _Preempted records
         self.finished: list = []
@@ -368,13 +426,16 @@ class StemEngine:
                       "starvation_grants": 0, "alloc_denials": 0,
                       "straggler_steps": 0,
                       "prefix_hits": 0, "prefix_pages_shared": 0,
-                      "prefix_cows": 0}
-        self._slot_ever_used = [False] * S
+                      "prefix_cows": 0, "admission_rejects": 0,
+                      "host_syncs": 0}
+        self._slot_ever_used = [False] * T
         self._seq: dict = {}                   # uid -> submission order
         self._arrival_t: dict = {}             # uid -> first-schedulable wall
         self._next_seq = 0
-        self._last_chunk_step = 0              # last step a chunk ran (or no
-                                               # prefill work existed)
+        self._last_chunk_step = [0] * self.groups
+                                               # last step a chunk ran (or no
+                                               # prefill work existed), per
+                                               # slot group
         self.monitor = StragglerMonitor(
             threshold=ecfg.straggler_threshold,
             on_straggler=lambda s, dt, ema: self.stats.__setitem__(
@@ -399,17 +460,36 @@ class StemEngine:
         self._unified = jax.jit(steps_lib.make_unified_step(
             bundle, stem_cfg=self.policy, budget_frac=ecfg.budget_frac,
             chunk_k_max=k_bound, executor=ecfg.executor,
-            on_trace=_count("traces")),
+            on_trace=_count("traces"), smesh=self.smesh),
             donate_argnums=(1,))
-        self._reset = jax.jit(paged_lib.reset_pools_stacked,
-                              donate_argnums=(0,))
-        self._extract = jax.jit(steps_lib.make_page_extract())
-        self._restore_pages = jax.jit(steps_lib.make_page_restore(),
-                                      donate_argnums=(0,))
-        # Copy-on-write device copy (prefix caching); traced page ids, so
-        # this compiles once and never touches the trace counters.
-        self._page_copy = jax.jit(steps_lib.make_page_copy(),
+        if self.smesh is not None:
+            # Group-vmapped page-management jits: every argument gains a
+            # leading (dp,) axis — non-target groups ride along with
+            # trash-page rows (page 0 is garbage by design), so each still
+            # compiles exactly once.  out_shardings pins the pool layout so
+            # extract/restore shards map 1:1 onto mesh coordinates.
+            from repro.sharding import serving as serving_lib
+            pool_sh = serving_lib.pool_sharding(self.smesh)
+            self._reset = jax.jit(jax.vmap(paged_lib.reset_pools_stacked),
+                                  donate_argnums=(0,), out_shardings=pool_sh)
+            self._extract = jax.jit(jax.vmap(steps_lib.make_page_extract()),
+                                    out_shardings=pool_sh)
+            self._restore_pages = jax.jit(
+                jax.vmap(steps_lib.make_page_restore()),
+                donate_argnums=(0,), out_shardings=pool_sh)
+            self._page_copy = jax.jit(jax.vmap(steps_lib.make_page_copy()),
+                                      donate_argnums=(0,),
+                                      out_shardings=pool_sh)
+        else:
+            self._reset = jax.jit(paged_lib.reset_pools_stacked,
                                   donate_argnums=(0,))
+            self._extract = jax.jit(steps_lib.make_page_extract())
+            self._restore_pages = jax.jit(steps_lib.make_page_restore(),
+                                          donate_argnums=(0,))
+            # Copy-on-write device copy (prefix caching); traced page ids,
+            # so this compiles once and never touches the trace counters.
+            self._page_copy = jax.jit(steps_lib.make_page_copy(),
+                                      donate_argnums=(0,))
         self._prefill = None
         if ecfg.monolithic_prefill:
             # Legacy A/B arm: one trace per padded prompt-length bucket.
@@ -445,7 +525,7 @@ class StemEngine:
         self.finished.clear()
         keep = ("traces", "prefill_traces")
         self.stats.update({k: 0 for k in self.stats if k not in keep})
-        self._slot_ever_used = [False] * self.ecfg.max_slots
+        self._slot_ever_used = [False] * self.total_slots
         self.monitor.flagged.clear()
 
     @property
@@ -458,29 +538,41 @@ class StemEngine:
             "offloaded_requests": len(self.preempted),
             "offload_resident_bytes": self.host_store.nbytes,
             "offload_peak_bytes": self.host_store.peak_nbytes,
-            "allocator_evictions": self.allocator.evictions,
-            "allocator_restores": self.allocator.restores,
-            "allocator_total_alloced": self.allocator.total_alloced,
-            "prefix_shares": self.allocator.shares,
-            "prefix_cached_pages": self.allocator.cached_pages,
+            "allocator_evictions": sum(a.evictions for a in self.allocators),
+            "allocator_restores": sum(a.restores for a in self.allocators),
+            "allocator_total_alloced": sum(a.total_alloced
+                                           for a in self.allocators),
+            "prefix_shares": sum(a.shares for a in self.allocators),
+            "prefix_cached_pages": sum(a.cached_pages
+                                       for a in self.allocators),
             "chaos": self.chaos.counts if self.chaos else None,
         }
 
-    def _free_slot(self) -> Optional[int]:
-        for s, st in enumerate(self.slots):
-            if st is None:
+    def _group_of(self, slot: int) -> int:
+        return slot // self.slots_per_group
+
+    def _group_slots(self, g: int) -> range:
+        S = self.slots_per_group
+        return range(g * S, (g + 1) * S)
+
+    def _free_slot_in(self, g: int) -> Optional[int]:
+        for s in self._group_slots(g):
+            if self.slots[s] is None:
                 return s
         return None
 
     def _check_pages(self) -> None:
-        """Refcount conservation after any path that moves pages: the
-        engine's live references — one per slot-held page, plus one per
-        shared prefix page pinned by an offloaded request — must match the
-        allocator's refcounts exactly (a MULTISET: a page shared by k slots
-        appears k times)."""
-        held = [p for pages in self.slot_pages if pages for p in pages]
-        held += [p for rec in self.preempted for p in rec.shared_pages]
-        self.allocator.check_conservation(held)
+        """Refcount conservation after any path that moves pages: each
+        group's live references — one per slot-held page, plus one per
+        shared prefix page pinned by an offloaded request — must match that
+        group's allocator refcounts exactly (a MULTISET: a page shared by k
+        slots appears k times)."""
+        for g, alloc in enumerate(self.allocators):
+            held = [p for s in self._group_slots(g)
+                    if self.slot_pages[s] for p in self.slot_pages[s]]
+            held += [p for rec in self.preempted if rec.group == g
+                     for p in rec.shared_pages]
+            alloc.check_conservation(held)
 
     # -- preemption + host offload ------------------------------------------
 
@@ -495,19 +587,31 @@ class StemEngine:
         st = self.slots[slot]
         if st is None:
             raise ValueError(f"slot {slot} is not active")
+        g = self._group_of(slot)
         pages = self.slot_pages[slot]
         nshared = self.slot_nshared[slot]
         shared, private = pages[:nshared], pages[nshared:]
-        row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
-        row[:len(private)] = private
-        snap = self._extract(self.pools, jnp.asarray(row))
+        W = self.ecfg.max_pages_per_slot
+        if self.smesh is not None:
+            # Extract the victim's rows for its own group only; other
+            # groups gather their trash page.  The snapshot stays sharded
+            # per mesh coordinate on the host, so restore puts each tp
+            # shard's bytes back exactly where they came from.
+            rows = np.zeros((self.groups, W), np.int32)
+            rows[g, :len(private)] = private
+            snap = self._extract(self.pools, jnp.asarray(rows))
+            snap = offload_lib.shard_snapshot_to_host(snap, self.smesh, g)
+        else:
+            row = np.zeros((W,), np.int32)
+            row[:len(private)] = private
+            snap = self._extract(self.pools, jnp.asarray(row))
         self.host_store.put(st.req.uid, snap, pinned=shared)
         st.preemptions += 1
         self.preempted.append(_Preempted(
             st=st, npages=len(private), cache_len=int(self.cache_lens[slot]),
             seq=self._seq[st.req.uid], preempt_step=self.step_count,
-            shared_pages=list(shared)))
-        self.allocator.evict(private)
+            shared_pages=list(shared), group=g))
+        self.allocators[g].evict(private)
         self.page_table[slot] = 0
         self.cache_lens[slot] = 0
         self.slot_pages[slot] = None
@@ -524,19 +628,19 @@ class StemEngine:
         the snapshot + pins, retry on a later step — or abort the request
         with an explicit error once ``max_restore_retries`` is exhausted
         (releasing the pins)."""
-        row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
-        row[:rec.npages] = pages
+        g = rec.group
+        W = self.ecfg.max_pages_per_slot
         try:
             if self.chaos:
                 self.chaos.maybe_fail_restore(self.step_count)
         except InjectedFailure as e:
-            self.allocator.free(pages)
+            self.allocators[g].free(pages)
             rec.restore_attempts += 1
             self.stats["restore_failures"] += 1
             if rec.restore_attempts > self.ecfg.max_restore_retries:
                 self.host_store.drop(rec.st.req.uid)
                 if rec.shared_pages:
-                    self.allocator.free(rec.shared_pages)
+                    self.allocators[g].free(rec.shared_pages)
                 self.stats["aborts"] += 1
                 self._finish_with_error(
                     rec.st, slot=-1,
@@ -547,7 +651,17 @@ class StemEngine:
             self._check_pages()
             return False
         snap = self.host_store.pop(rec.st.req.uid)
-        self.pools = self._restore_pages(self.pools, jnp.asarray(row), snap)
+        if self.smesh is not None:
+            rows = np.zeros((self.groups, W), np.int32)
+            rows[g, :rec.npages] = pages
+            snap = offload_lib.assemble_sharded_snapshot(snap, self.smesh, g)
+            self.pools = self._restore_pages(self.pools, jnp.asarray(rows),
+                                             snap)
+        else:
+            row = np.zeros((W,), np.int32)
+            row[:rec.npages] = pages
+            self.pools = self._restore_pages(self.pools, jnp.asarray(row),
+                                             snap)
         all_pages = list(rec.shared_pages) + list(pages)
         full_row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
         full_row[:len(all_pages)] = all_pages
@@ -563,15 +677,17 @@ class StemEngine:
         self._check_pages()
         return True
 
-    def _try_preempt_for(self, priority: int, need_pages: int) -> bool:
-        """Preempt one strictly-lower-priority running request to make room
-        (a slot and/or pages) for an admission at ``priority``.  Refuses
-        when evicting every eligible victim still could not free enough
-        pages — no pointless offloads."""
+    def _try_preempt_for(self, priority: int, need_pages: int,
+                         group: int) -> bool:
+        """Preempt one strictly-lower-priority running request in slot
+        group ``group`` to make room (a slot and/or pages) for an admission
+        at ``priority``.  Refuses when evicting every eligible victim still
+        could not free enough pages — no pointless offloads."""
         if (self.ecfg.scheduler != "slo" or not self.ecfg.preemption):
             return False
-        victims = [s for s, st in enumerate(self.slots)
-                   if st is not None and st.req.priority < priority]
+        victims = [s for s in self._group_slots(group)
+                   if self.slots[s] is not None
+                   and self.slots[s].req.priority < priority]
         if not victims:
             return False
         # Only a victim's PRIVATE pages come back (shared prefix pages stay
@@ -579,12 +695,20 @@ class StemEngine:
         # private page is also shared by another slot.
         reclaimable = sum(len(self.slot_pages[s]) - self.slot_nshared[s]
                           for s in victims)
-        if self.allocator.available + reclaimable < need_pages:
+        if self.allocators[group].available + reclaimable < need_pages:
             return False
-        # Lowest priority loses first; among equals, the most recently
-        # admitted (least sunk progress time).
-        victim = min(victims, key=lambda s: (self.slots[s].req.priority,
-                                             -self.slots[s].admitted_step, -s))
+        # Restore-cost model: the victim class is the LOWEST priority
+        # present (never climb the ladder for a cheaper restore); within
+        # it, evict the request whose restore is cheapest — fewest PRIVATE
+        # pages, i.e. the bytes that actually round-trip through the host
+        # snapshot (shared prefix pages stay on-device either way).  Ties
+        # break toward most-recently-admitted (least sunk progress), then
+        # the higher slot id, keeping the pick deterministic.
+        lowest = min(self.slots[s].req.priority for s in victims)
+        cls = [s for s in victims if self.slots[s].req.priority == lowest]
+        victim = min(cls, key=lambda s: (
+            len(self.slot_pages[s]) - self.slot_nshared[s],
+            -self.slots[s].admitted_step, -s))
         self.preempt(victim)
         return True
 
@@ -608,7 +732,7 @@ class StemEngine:
         back to the free list and the slot frees up."""
         st = self.slots[slot]
         self._finish_with_error(st, slot, error)
-        self.allocator.free(self.slot_pages[slot])
+        self.allocators[self._group_of(slot)].free(self.slot_pages[slot])
         self.page_table[slot] = 0
         self.cache_lens[slot] = 0
         self.slot_pages[slot] = None
@@ -642,6 +766,57 @@ class StemEngine:
             self._seq.pop(req.uid, None)
             self.stats["shed"] += 1
 
+    def _admission_control(self) -> None:
+        """SLO-aware admission control (off by default): reject a waiting
+        request up front, with an explicit error, when its TTFT SLO is
+        already infeasible at the current measured step time.
+
+        The feasibility model is deliberately coarse — prefill throughput
+        is bounded by ``groups * chunk_lanes * chunk_size`` tokens per
+        step, so a request behind ``ahead`` backlogged prompt tokens needs
+        at least ``ceil((ahead + own) / cap)`` more steps before its first
+        token, each costing the engine's step-time EMA.  Queueing time
+        already spent counts too.  Requests without a TTFT SLO are never
+        rejected; with no EMA yet (cold engine) everything is admitted."""
+        if not self.ecfg.admission_control:
+            return
+        ema = self.monitor.ema
+        if not ema:
+            return
+        now = time.perf_counter()
+        cap = self.groups * self.chunk_lanes * self.chunk_size
+        backlog = sum(len(st.padded) - st.prefill_pos
+                      for st in self.slots
+                      if st is not None and st.phase == "prefill")
+        arrived = [r for r in self.waiting
+                   if r.arrival_step <= self.step_count]
+        if self.ecfg.scheduler == "slo":
+            arrived.sort(key=lambda r: (-r.priority, self._seq[r.uid]))
+        ahead = backlog
+        reject = []
+        for r in arrived:
+            padded = -(-len(r.prompt) // self.page_size) * self.page_size
+            if r.ttft_slo_s is not None:
+                steps = -(-(ahead + padded) // cap)
+                est = ((now - self._arrival_t.get(r.uid, now))
+                       + steps * ema)
+                if est > r.ttft_slo_s:
+                    reject.append((r, est, steps))
+                    continue
+            ahead += padded
+        for r, est, steps in reject:
+            self.waiting.remove(r)
+            self.finished.append(FinishedRequest(
+                uid=r.uid, prompt_len=len(r.prompt), tokens=[], slot=-1,
+                admitted_step=-1, finished_step=self.step_count,
+                ttft_s=float("nan"), tpot_s=float("nan"),
+                token_latencies_s=[], priority=r.priority,
+                error=(f"rejected: TTFT SLO {r.ttft_slo_s * 1e3:.1f} ms "
+                       f"infeasible (>= {steps} prefill steps "
+                       f"~ {est * 1e3:.1f} ms at current load)")))
+            self._seq.pop(r.uid, None)
+            self.stats["admission_rejects"] += 1
+
     def _lowest_priority_active(self) -> Optional[int]:
         active = [s for s, st in enumerate(self.slots) if st is not None]
         if not active:
@@ -649,15 +824,16 @@ class StemEngine:
         return min(active, key=lambda s: (self.slots[s].req.priority,
                                           -self.slots[s].admitted_step, -s))
 
-    def _try_alloc(self, n: int, restore: bool = False):
-        """(pages | None, chaos_denied).  An injected denial models
-        transient allocator exhaustion: the admission blocks this step and
-        retries on the next — it must never trigger preemption."""
+    def _try_alloc(self, n: int, group: int, restore: bool = False):
+        """(pages | None, chaos_denied) from ``group``'s allocator.  An
+        injected denial models transient allocator exhaustion: the
+        admission blocks this step and retries on the next — it must never
+        trigger preemption."""
         if self.chaos and self.chaos.deny_alloc(self.step_count):
             self.stats["alloc_denials"] += 1
             return None, True
-        pages = (self.allocator.restore(n) if restore
-                 else self.allocator.alloc(n))
+        alloc = self.allocators[group]
+        pages = alloc.restore(n) if restore else alloc.alloc(n)
         return pages, False
 
     # -- engine iteration ---------------------------------------------------
@@ -692,13 +868,16 @@ class StemEngine:
         self._admit_loop()
         self._shed()
 
-    def _probe_prefix(self, req: Request) -> _PrefixMatch:
-        """Probe the allocator's prefix index for the request's whole prompt
+    def _probe_prefix(self, req: Request, group: int) -> _PrefixMatch:
+        """Probe ``group``'s prefix index for the request's whole prompt
         pages and PIN every hit (take a reference) before any allocation —
-        an alloc drawing on the cached-LRU pool could otherwise reclaim a
+        an alloc drawing on the cached pool could otherwise reclaim a
         just-probed page.  The caller must ``_release_prefix`` if admission
         blocks.  The longest matched *chain* wins: a miss at page j stops
-        the scan (page j+1's contents depend on page j's tokens)."""
+        the scan (page j+1's contents depend on page j's tokens).  Prefix
+        indexes are per slot group: pages only exist in their group's pool
+        shard (cross-group sharing is the ROADMAP cross-engine item)."""
+        alloc = self.allocators[group]
         plen = len(req.prompt)
         bs = self.page_size
         padded_len = -(-plen // bs) * bs
@@ -710,16 +889,28 @@ class StemEngine:
         last_page = (plen - 1) // bs
         shared, cow = [], []
         for j, key in enumerate(keys):
-            p = self.allocator.probe(key)
+            p = alloc.probe(key)
             if p is None:
                 break
-            self.allocator.share(p)
+            alloc.share(p)
             (shared if j < last_page else cow).append(p)
         return _PrefixMatch(keys=keys, shared=shared, cow=cow)
 
-    def _release_prefix(self, prefix: Optional[_PrefixMatch]) -> None:
+    def _release_prefix(self, prefix: Optional[_PrefixMatch],
+                        group: int) -> None:
         if prefix is not None and (prefix.shared or prefix.cow):
-            self.allocator.free(prefix.shared + prefix.cow)
+            self.allocators[group].free(prefix.shared + prefix.cow)
+
+    def _candidate_groups(self) -> list:
+        """Placement preference for a NEW request: groups with a free slot
+        first, then most available pages, then the lowest group id — cheap
+        host-side balancing across the dp slot groups.  Restores never get
+        a choice: a preempted request's snapshot bytes belong to its
+        original group's pool shard."""
+        def key(g):
+            return (self._free_slot_in(g) is None,
+                    -self.allocators[g].available, g)
+        return sorted(range(self.groups), key=key)
 
     def _admit_loop(self) -> None:
         while True:
@@ -727,37 +918,54 @@ class StemEngine:
             if cand is None:
                 return
             kind, idx = cand
-            prefix = None
             if kind == "new":
                 req = self.waiting[idx]
                 prio = req.priority
-                npages = self._pages_needed(len(req.prompt),
-                                            req.max_new_tokens)
-                if self.ecfg.prefix_cache:
-                    prefix = self._probe_prefix(req)
-                    npages -= len(prefix.shared)
+                npages_full = self._pages_needed(len(req.prompt),
+                                                 req.max_new_tokens)
+                groups = self._candidate_groups()
             else:
                 rec = self.preempted[idx]
                 prio = rec.st.req.priority
-                npages = rec.npages
-            slot = self._free_slot()
-            if slot is None:
-                if not self._try_preempt_for(prio, npages):
-                    self._release_prefix(prefix)
-                    return                  # slot-blocked — head-of-line waits
-                slot = self._free_slot()
-            pages, denied = self._try_alloc(npages, restore=(kind == "pre"))
-            if denied:
-                self._release_prefix(prefix)
-                return                      # transient exhaustion — retry later
-            while pages is None:
-                if not self._try_preempt_for(prio, npages):
-                    self._release_prefix(prefix)
-                    return                  # memory-blocked — head-of-line waits
-                pages, denied = self._try_alloc(npages, restore=(kind == "pre"))
+                groups = [rec.group]
+            # Try each eligible group in preference order; the head-of-line
+            # candidate waits (no bypass) only when EVERY group is blocked.
+            placed = False
+            for g in groups:
+                prefix = None
+                if kind == "new":
+                    npages = npages_full
+                    if self.ecfg.prefix_cache:
+                        prefix = self._probe_prefix(req, g)
+                        npages -= len(prefix.shared)
+                else:
+                    npages = rec.npages
+                slot = self._free_slot_in(g)
+                if slot is None:
+                    if not self._try_preempt_for(prio, npages, g):
+                        self._release_prefix(prefix, g)
+                        continue            # slot-blocked in this group
+                    slot = self._free_slot_in(g)
+                pages, denied = self._try_alloc(npages, g,
+                                                restore=(kind == "pre"))
                 if denied:
-                    self._release_prefix(prefix)
-                    return
+                    self._release_prefix(prefix, g)
+                    return                  # transient exhaustion — retry later
+                while pages is None:
+                    if not self._try_preempt_for(prio, npages, g):
+                        break
+                    pages, denied = self._try_alloc(npages, g,
+                                                    restore=(kind == "pre"))
+                    if denied:
+                        self._release_prefix(prefix, g)
+                        return
+                if pages is None:
+                    self._release_prefix(prefix, g)
+                    continue                # memory-blocked in this group
+                placed = True
+                break
+            if not placed:
+                return                      # head-of-line waits everywhere
             if kind == "pre":
                 del self.preempted[idx]
                 if not self._admit_restore(rec, slot, pages):
@@ -818,9 +1026,16 @@ class StemEngine:
         # pages).  Shared prefix pages carry live canonical contents and
         # must NOT be reset.  The reset row is the same fixed trash-padded
         # width either way — no new traces.
-        fresh_row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
-        fresh_row[:len(pages)] = pages
-        self.pools = self._reset(self.pools, jnp.asarray(fresh_row))
+        g = self._group_of(slot)
+        if self.smesh is not None:
+            fresh_rows = np.zeros((self.groups, self.ecfg.max_pages_per_slot),
+                                  np.int32)
+            fresh_rows[g, :len(pages)] = pages
+            self.pools = self._reset(self.pools, jnp.asarray(fresh_rows))
+        else:
+            fresh_row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
+            fresh_row[:len(pages)] = pages
+            self.pools = self._reset(self.pools, jnp.asarray(fresh_row))
         if prefix and prefix.cow:
             # Copy-on-write: a fully-matched exact-page-multiple prompt
             # still replays its final page (first-token logits), and the
@@ -829,11 +1044,19 @@ class StemEngine:
             # n_share and the probe's pin on the original is dropped.
             src = prefix.cow[0]
             dst = pages[0]
-            self.pools = self._page_copy(self.pools,
-                                         jnp.asarray(src, jnp.int32),
-                                         jnp.asarray(dst, jnp.int32))
-            self.allocator.free([src])
-            self.allocator.cows += 1      # private dst came from the bulk
+            if self.smesh is not None:
+                # Non-target groups copy trash page 0 onto itself (no-op).
+                srcv = np.zeros((self.groups,), np.int32)
+                dstv = np.zeros((self.groups,), np.int32)
+                srcv[g], dstv[g] = src, dst
+                self.pools = self._page_copy(self.pools, jnp.asarray(srcv),
+                                             jnp.asarray(dstv))
+            else:
+                self.pools = self._page_copy(self.pools,
+                                             jnp.asarray(src, jnp.int32),
+                                             jnp.asarray(dst, jnp.int32))
+            self.allocators[g].free([src])
+            self.allocators[g].cows += 1  # private dst came from the bulk
                                           # alloc, not allocator.cow()
             self.stats["prefix_cows"] += 1
         if prefix and (prefix.shared or prefix.cow):
@@ -877,7 +1100,7 @@ class StemEngine:
         # Shared refs decrement (co-tenants keep the pages); a registered
         # page at ref 0 parks in the allocator's cached set, contents
         # intact, so the NEXT tenant with this prefix still hits.
-        self.allocator.free(self.slot_pages[slot])
+        self.allocators[self._group_of(slot)].free(self.slot_pages[slot])
         self.page_table[slot] = 0
         self.cache_lens[slot] = 0
         self.slot_pages[slot] = None
@@ -907,119 +1130,149 @@ class StemEngine:
 
     def _mixed_step(self) -> bool:
         """One unified-step invocation: the scheduled decode tokens plus as
-        many prefill chunks as the token budget admits.  Returns whether
-        any work ran (for straggler timing)."""
+        many prefill chunks as the token budget admits, for EVERY slot
+        group at once — the replicated host scheduler partitions its grants
+        per group (each group gets the full per-group token budget and its
+        own chunk lanes), and one jitted call advances all of them.
+        Returns whether any work ran (for straggler timing)."""
         dec_all = [s for s, st in enumerate(self.slots)
                    if st is not None and st.phase == "decode"]
-        pre = [s for s, st in enumerate(self.slots)
-               if st is not None and st.phase == "prefill"]
-        if not dec_all and not pre:
-            self._last_chunk_step = self.step_count
+        pre_all = [s for s, st in enumerate(self.slots)
+                   if st is not None and st.phase == "prefill"]
+        if not dec_all and not pre_all:
+            self._last_chunk_step = [self.step_count] * self.groups
             return False
         # Injection point: strictly BEFORE any pool mutation, so a bounded
         # retry of this step never double-applies summary increments.
         if self.chaos:
             self.chaos.maybe_fail_step(self.step_count)
         self.stats["max_concurrency"] = max(self.stats["max_concurrency"],
-                                            len(dec_all) + len(pre))
+                                            len(dec_all) + len(pre_all))
         sched_now = time.perf_counter()
 
-        # Token budget: decode tokens first — ordered by (priority, SLO
-        # headroom, least-recently-served); FCFS: admission order — with
-        # decodes beyond the budget deferred to later steps.
-        cap = max(1, self.token_budget)
-        dec_all.sort(key=lambda s: self._decode_key(s, sched_now))
-        dec = dec_all[:cap]
-        deferred = dec_all[cap:]
-        self.stats["decode_deferrals"] += len(deferred)
-
-        # Adaptive chunk sizing: under decode-lane TPOT pressure (a decode
-        # was deferred, or a TPOT SLO is currently violated) cap the chunk
-        # grant at one lane — prefill yields to the decode SLOs.
-        pressure = False
-        if self.ecfg.scheduler == "slo":
-            violating = any(
-                self.slots[s].req.tpot_slo_s is not None
-                and sched_now - self.slots[s].last_token_t
-                    > self.slots[s].req.tpot_slo_s
-                for s in dec_all)
-            pressure = bool(deferred) or violating
-        lanes_cap = 1 if pressure else self.chunk_lanes
-        if pressure and pre and lanes_cap < self.chunk_lanes:
-            self.stats["chunk_caps"] += 1
-
-        # Whole chunks into the static chunk lanes, priority/TTFT-headroom
-        # order (FCFS: admission order).  Always grant at least one chunk
-        # when prefill work exists and nothing else would run, and force
-        # one when prefill has starved ``chunk_starve_steps`` steps — the
-        # bounded overdraft that keeps decode saturation from starving
-        # prefill forever.
+        G, Sg = self.groups, self.slots_per_group
         C = self.chunk_size
-        remaining = self.token_budget - len(dec)
-        pre.sort(key=lambda s: self._chunk_key(s, sched_now))
-        grant = []
-        for s in pre:
-            if len(grant) >= lanes_cap:
-                break
-            if remaining >= C or (not grant and not dec):
-                grant.append(s)
-                remaining -= C
-        if (not grant and pre and
-                self.step_count - self._last_chunk_step
-                >= self.ecfg.chunk_starve_steps):
-            grant = [pre[0]]
-            self.stats["starvation_grants"] += 1
-        if grant or not pre:
-            self._last_chunk_step = self.step_count
+        cap = max(1, self.token_budget)         # per slot group
+        dec, grants = [], []
+        for g in range(G):
+            # Token budget: decode tokens first — ordered by (priority, SLO
+            # headroom, least-recently-served); FCFS: admission order —
+            # with decodes beyond the budget deferred to later steps.
+            dec_g_all = sorted((s for s in dec_all if s // Sg == g),
+                               key=lambda s: self._decode_key(s, sched_now))
+            dec_g = dec_g_all[:cap]
+            deferred = dec_g_all[cap:]
+            self.stats["decode_deferrals"] += len(deferred)
 
-        S, P = self.ecfg.max_slots, self.ecfg.max_pages_per_slot
-        tokens = np.zeros((S, 1), np.int32)
-        dec_table = np.zeros((S, P), np.int32)
-        dec_lens = np.zeros((S,), np.int32)
+            # Adaptive chunk sizing: under this group's decode-lane TPOT
+            # pressure (a decode was deferred, or a TPOT SLO is currently
+            # violated) cap the chunk grant at one lane — prefill yields
+            # to the decode SLOs.
+            pre_g = sorted((s for s in pre_all if s // Sg == g),
+                           key=lambda s: self._chunk_key(s, sched_now))
+            pressure = False
+            if self.ecfg.scheduler == "slo":
+                violating = any(
+                    self.slots[s].req.tpot_slo_s is not None
+                    and sched_now - self.slots[s].last_token_t
+                        > self.slots[s].req.tpot_slo_s
+                    for s in dec_g_all)
+                pressure = bool(deferred) or violating
+            lanes_cap = 1 if pressure else self.chunk_lanes
+            if pressure and pre_g and lanes_cap < self.chunk_lanes:
+                self.stats["chunk_caps"] += 1
+
+            # Whole chunks into the static chunk lanes, priority/TTFT-
+            # headroom order (FCFS: admission order).  Always grant at
+            # least one chunk when prefill work exists and nothing else
+            # would run in this group, and force one when prefill has
+            # starved ``chunk_starve_steps`` steps — the bounded overdraft
+            # that keeps decode saturation from starving prefill forever.
+            remaining = self.token_budget - len(dec_g)
+            grant_g = []
+            for s in pre_g:
+                if len(grant_g) >= lanes_cap:
+                    break
+                if remaining >= C or (not grant_g and not dec_g):
+                    grant_g.append(s)
+                    remaining -= C
+            if (not grant_g and pre_g and
+                    self.step_count - self._last_chunk_step[g]
+                    >= self.ecfg.chunk_starve_steps):
+                grant_g = [pre_g[0]]
+                self.stats["starvation_grants"] += 1
+            if grant_g or not pre_g:
+                self._last_chunk_step[g] = self.step_count
+            dec += dec_g
+            grants.append(grant_g)
+
+        T, P = self.total_slots, self.ecfg.max_pages_per_slot
+        tokens = np.zeros((T, 1), np.int32)
+        dec_table = np.zeros((T, P), np.int32)
+        dec_lens = np.zeros((T,), np.int32)
         for s in dec:
             tokens[s, 0] = self.slots[s].tokens[-1]
             dec_table[s] = self.page_table[s]
             dec_lens[s] = self.cache_lens[s]
             self.slots[s].last_sched_step = self.step_count
 
+        any_grant = any(grants)
         chunk = None
-        if grant:
-            # Narrow chunked-prefill lane: L = chunk_lanes rows, lane i
-            # carrying grant[i]'s next chunk.  With no grants the step runs
-            # the decode-only signature — two static traces total, never
-            # per-prompt-length.
+        if any_grant:
+            # Narrow chunked-prefill lane: L = chunk_lanes rows PER GROUP,
+            # lane i carrying that group's i-th granted chunk.  With no
+            # grants anywhere the step runs the decode-only signature —
+            # two static traces total, never per-prompt-length.
             L, nc = self.chunk_lanes, C // self.page_size
-            ctoks = np.zeros((L, C), np.int32)
-            ctable = np.zeros((L, P), np.int32)
-            cstart = np.zeros((L,), np.int32)
-            ctrue = np.zeros((L,), np.int32)
-            cbud = np.zeros((L, nc), np.int32)
-            clast = np.zeros((L,), np.int32)
-            for lane, s in enumerate(grant):
-                st = self.slots[s]
-                pos = st.prefill_pos
-                avail = st.padded[pos:pos + C]
-                ctoks[lane, :len(avail)] = avail
-                ctable[lane] = self.page_table[s]
-                cstart[lane] = pos
-                ctrue[lane] = st.true_len
-                cbud[lane] = chunked_lib.chunk_budget_rows(
-                    self.policy, len(st.padded), pos, nc)
-                clast[lane] = min(max(st.true_len - 1 - pos, 0), C - 1)
-            chunk = {"tokens": jnp.asarray(ctoks),
-                     "page_table": jnp.asarray(ctable),
-                     "start": jnp.asarray(cstart),
-                     "true_len": jnp.asarray(ctrue),
-                     "budgets": jnp.asarray(cbud),
-                     "last": jnp.asarray(clast)}
+            ctoks = np.zeros((G, L, C), np.int32)
+            ctable = np.zeros((G, L, P), np.int32)
+            cstart = np.zeros((G, L), np.int32)
+            ctrue = np.zeros((G, L), np.int32)
+            cbud = np.zeros((G, L, nc), np.int32)
+            clast = np.zeros((G, L), np.int32)
+            for g, grant_g in enumerate(grants):
+                for lane, s in enumerate(grant_g):
+                    st = self.slots[s]
+                    pos = st.prefill_pos
+                    avail = st.padded[pos:pos + C]
+                    ctoks[g, lane, :len(avail)] = avail
+                    ctable[g, lane] = self.page_table[s]
+                    cstart[g, lane] = pos
+                    ctrue[g, lane] = st.true_len
+                    cbud[g, lane] = chunked_lib.chunk_budget_rows(
+                        self.policy, len(st.padded), pos, nc)
+                    clast[g, lane] = min(max(st.true_len - 1 - pos, 0), C - 1)
+            grp = (lambda a: a) if self.smesh is not None else (lambda a: a[0])
+            chunk = {"tokens": jnp.asarray(grp(ctoks)),
+                     "page_table": jnp.asarray(grp(ctable)),
+                     "start": jnp.asarray(grp(cstart)),
+                     "true_len": jnp.asarray(grp(ctrue)),
+                     "budgets": jnp.asarray(grp(cbud)),
+                     "last": jnp.asarray(grp(clast))}
 
+        if self.smesh is not None:
+            dec_in = jnp.asarray(tokens.reshape(G, Sg, 1))
+            tab_in = jnp.asarray(dec_table.reshape(G, Sg, P))
+            len_in = jnp.asarray(dec_lens.reshape(G, Sg))
+        else:
+            dec_in = jnp.asarray(tokens)
+            tab_in = jnp.asarray(dec_table)
+            len_in = jnp.asarray(dec_lens)
         dec_logits, chunk_logits, self.pools = self._unified(
-            self.params, self.pools, jnp.asarray(tokens),
-            jnp.asarray(dec_table), jnp.asarray(dec_lens), chunk)
+            self.params, self.pools, dec_in, tab_in, len_in, chunk)
+        # The ONLY per-step host syncs, mesh or not: one logits fetch per
+        # active lane kind (tracked so the scaling benchmark can assert the
+        # mesh adds none).
         if dec:
             dec_logits = np.asarray(dec_logits)
-        if grant:
+            if self.smesh is not None:
+                dec_logits = dec_logits.reshape(T, -1)
+            self.stats["host_syncs"] += 1
+        if any_grant:
             chunk_logits = np.asarray(chunk_logits)
+            if self.smesh is None:
+                chunk_logits = chunk_logits[None]       # (1, L, vocab)
+            self.stats["host_syncs"] += 1
         now = time.perf_counter()
         self.stats["step_calls"] += 1
         if dec:
@@ -1035,29 +1288,33 @@ class StemEngine:
             if self._is_finished(st):
                 self._recycle(s)
 
-        for lane, s in enumerate(grant):
-            st = self.slots[s]
-            st.prefill_pos += C
-            self.stats["chunks"] += 1
-            if st.prefill_pos >= len(st.padded):
-                # This chunk completed the prompt: its logits at the true
-                # last token are the request's first generated token.
-                st.tokens = [int(np.argmax(chunk_logits[lane]))]
-                st.phase = "decode"
-                self.cache_lens[s] = st.true_len
-                if st.prefix_keys:
-                    # Contents of every full prompt page are now final —
-                    # content-address them for future tenants (idempotent
-                    # for pages this request itself shared; the partial
-                    # tail page has no key and stays private).
-                    for j, key in enumerate(st.prefix_keys):
-                        self.allocator.register(self.slot_pages[s][j], key)
-                st.first_token_t = st.last_token_t = now
-                st.ttft_s = now - st.arrival_t
-                self.stats["prefills"] += 1
-                self.stats["tokens_generated"] += 1
-                if self._is_finished(st):
-                    self._recycle(s)
+        for g, grant_g in enumerate(grants):
+            for lane, s in enumerate(grant_g):
+                st = self.slots[s]
+                st.prefill_pos += C
+                self.stats["chunks"] += 1
+                if st.prefill_pos >= len(st.padded):
+                    # This chunk completed the prompt: its logits at the
+                    # true last token are the request's first generated
+                    # token.
+                    st.tokens = [int(np.argmax(chunk_logits[g, lane]))]
+                    st.phase = "decode"
+                    self.cache_lens[s] = st.true_len
+                    if st.prefix_keys:
+                        # Contents of every full prompt page are now final
+                        # — content-address them for future tenants
+                        # (idempotent for pages this request itself
+                        # shared; the partial tail page has no key and
+                        # stays private).
+                        for j, key in enumerate(st.prefix_keys):
+                            self.allocators[g].register(
+                                self.slot_pages[s][j], key)
+                    st.first_token_t = st.last_token_t = now
+                    st.ttft_s = now - st.arrival_t
+                    self.stats["prefills"] += 1
+                    self.stats["tokens_generated"] += 1
+                    if self._is_finished(st):
+                        self._recycle(s)
         return True
 
     def _guarded_step(self) -> None:
@@ -1099,6 +1356,7 @@ class StemEngine:
         for r in self.waiting:
             if r.arrival_step <= self.step_count and r.uid not in self._arrival_t:
                 self._arrival_t[r.uid] = now
+        self._admission_control()
         self._admit()
         self._guarded_step()
         self.step_count += 1

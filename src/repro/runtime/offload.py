@@ -80,8 +80,91 @@ def scatter_pages(pools, page_row, snapshot):
 
 
 def snapshot_nbytes(snapshot) -> int:
-    return sum(int(np.asarray(leaf).nbytes)
-               for leaf in jax.tree.leaves(snapshot))
+    total = 0
+    for leaf in jax.tree.leaves(snapshot):
+        if isinstance(leaf, HostShards):
+            total += leaf.nbytes
+        else:
+            total += int(np.asarray(leaf).nbytes)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded snapshots (sharding/serving.py engines)
+# ---------------------------------------------------------------------------
+
+class HostShards:
+    """One sharded device array as per-shard host buffers keyed by mesh
+    coordinate ``(dp, tp)``.  Under tp>1 a snapshot leaf's KV-head axis is
+    split across devices; copying each shard's bytes verbatim and putting
+    them back on the device at the *same* mesh coordinate makes the
+    preempt/restore round-trip bit-identical with no gather/reshard on
+    either side.  Only the preempted slot group's shards are stored —
+    other groups' rows in the fixed-width extract are trash-page garbage.
+    """
+
+    __slots__ = ("shards", "shape", "dtype")
+
+    def __init__(self, shards: dict, shape, dtype):
+        self.shards = shards            # (dp, tp) coord -> np.ndarray
+        self.shape = tuple(shape)       # global (all-groups) shape
+        self.dtype = dtype
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(s.nbytes) for s in self.shards.values())
+
+
+def _mesh_coords(mesh) -> dict:
+    """Device id -> (dp, tp) mesh coordinate."""
+    return {dev.id: tuple(int(i) for i in idx)
+            for idx, dev in np.ndenumerate(mesh.devices)}
+
+
+def shard_snapshot_to_host(snapshot, smesh, group: int):
+    """Copy a mesh-sharded snapshot to host, keeping only slot group
+    ``group``'s shards.  Snapshot leaves are ``(dp, n, hk, W, ...)`` placed
+    with the pool sharding (dp over groups, tp over KV heads); each leaf
+    becomes a :class:`HostShards` holding the dp==group blocks per tp
+    coordinate."""
+    coords = _mesh_coords(smesh.mesh)
+
+    def one(x):
+        shards = {}
+        for sh in x.addressable_shards:
+            c = coords[sh.device.id]
+            if c[0] != group:
+                continue
+            shards[c] = np.asarray(sh.data)
+        return HostShards(shards, x.shape, x.dtype)
+
+    return jax.tree.map(one, snapshot)
+
+
+def assemble_sharded_snapshot(host, smesh, group: int):
+    """Inverse of ``shard_snapshot_to_host``: rebuild device-sharded
+    snapshot leaves with group ``group``'s bytes at their original tp
+    coordinates and zeros elsewhere (other groups' rows scatter into their
+    trash page — garbage by design)."""
+    from repro.sharding import serving as serving_lib
+
+    mesh = smesh.mesh
+    sharding = jax.sharding.NamedSharding(mesh, serving_lib.POOL_SPEC)
+
+    def one(hs: HostShards):
+        sample = next(iter(hs.shards.values()))
+        arrs = []
+        for idx, dev in np.ndenumerate(mesh.devices):
+            c = tuple(int(i) for i in idx)
+            buf = hs.shards.get(c)
+            if buf is None:
+                buf = np.zeros(sample.shape, hs.dtype)
+            arrs.append(jax.device_put(buf, dev))
+        return jax.make_array_from_single_device_arrays(
+            hs.shape, sharding, arrs)
+
+    return jax.tree.map(
+        one, host, is_leaf=lambda x: isinstance(x, HostShards))
 
 
 class HostPageStore:
@@ -113,7 +196,14 @@ class HostPageStore:
         observability, no bytes copied."""
         if uid in self._store:
             raise ValueError(f"request {uid} already offloaded")
-        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), snapshot)
+
+        def to_host(x):
+            if isinstance(x, HostShards):    # already host-resident shards
+                return x
+            return np.asarray(jax.device_get(x))
+
+        host = jax.tree.map(to_host, snapshot,
+                            is_leaf=lambda x: isinstance(x, HostShards))
         self._store[uid] = host
         self._pinned[uid] = list(pinned)
         self.nbytes += snapshot_nbytes(host)

@@ -352,7 +352,8 @@ def _paged_decode_xla(
 # (kernels/paged_attn.py registers "pallas").
 policy_lib.register_paged_executor(
     "xla", decode_fn=_paged_decode_xla,
-    chunk_fn=chunked_lib._chunked_prefill_xla)
+    chunk_fn=chunked_lib._chunked_prefill_xla,
+    sharding="kv-head")
 
 
 # ---------------------------------------------------------------------------
@@ -385,18 +386,31 @@ class PageAllocator:
     * ``cow(page)`` is the bookkeeping half of copy-on-write: it redirects
       the caller's reference on a shared page to a freshly allocated private
       page (the device copy is ``copy_pages_stacked``).
+
+    ``evict_policy`` picks which cached (ref-0) page ``alloc`` cannibalizes
+    when the free list runs dry: "lru" (default, least-recently parked) or
+    "hit-rate" (fewest prefix hits since registration, LRU breaking ties) —
+    a page that keeps getting shared is worth keeping over one that parked
+    earlier but never hit.
     """
 
-    def __init__(self, num_pages: int):
+    EVICT_POLICIES = ("lru", "hit-rate")
+
+    def __init__(self, num_pages: int, evict_policy: str = "lru"):
         if num_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
+        if evict_policy not in self.EVICT_POLICIES:
+            raise ValueError(f"evict_policy must be one of "
+                             f"{self.EVICT_POLICIES}, got {evict_policy!r}")
         self.num_pages = num_pages
+        self.evict_policy = evict_policy
         self._free = list(range(num_pages - 1, 0, -1))  # pop() -> lowest id
         self._allocated: set = set()
         self._ref: dict = {}            # page -> live reference count (>= 1)
         self._index: dict = {}          # prefix key -> page id (injective)
         self._key_of: dict = {}         # page id -> its prefix key
         self._cached: OrderedDict = OrderedDict()   # ref-0 registered, LRU
+        self._hits: dict = {}           # registered page -> prefix-hit count
         self.evictions = 0
         self.restores = 0
         self.total_alloced = 0          # pages handed out, lifetime
@@ -420,7 +434,8 @@ class PageAllocator:
     def alloc(self, n: int) -> Optional[list]:
         """Return n page ids at refcount 1, or None (all-or-nothing).
         Draws from the free list first, then reclaims cached prefix pages
-        LRU-first (unregistering them — their contents are gone)."""
+        per ``evict_policy`` (unregistering them — their contents are
+        gone)."""
         if n > self.available:
             return None
         pages = []
@@ -428,14 +443,27 @@ class PageAllocator:
             if self._free:
                 p = self._free.pop()
             else:
-                p, _ = self._cached.popitem(last=False)
-                self._unregister(p)
-                self.cache_reclaims += 1
+                p = self._reclaim_cached()
             pages.append(p)
             self._ref[p] = 1
         self._allocated.update(pages)
         self.total_alloced += n
         return pages
+
+    def _reclaim_cached(self) -> int:
+        """Pick a cached (ref-0) prefix page to cannibalize.  "lru" takes
+        the least-recently parked page; "hit-rate" takes the page with the
+        fewest prefix hits since registration, breaking ties LRU-first."""
+        if self.evict_policy == "hit-rate":
+            lru_rank = {q: i for i, q in enumerate(self._cached)}
+            p = min(self._cached,
+                    key=lambda q: (self._hits.get(q, 0), lru_rank[q]))
+            del self._cached[p]
+        else:
+            p, _ = self._cached.popitem(last=False)
+        self._unregister(p)
+        self.cache_reclaims += 1
+        return p
 
     def free(self, pages) -> None:
         """Drop one reference per listed page.  A page leaves the allocated
@@ -475,6 +503,7 @@ class PageAllocator:
         else:
             raise ValueError(f"page {page} is neither allocated nor cached")
         self.shares += 1
+        self._hits[page] = self._hits.get(page, 0) + 1
         return page
 
     def register(self, page: int, key) -> None:
@@ -510,6 +539,7 @@ class PageAllocator:
         key = self._key_of.pop(page, None)
         if key is not None and self._index.get(key) == page:
             del self._index[key]
+        self._hits.pop(page, None)
 
     def evict(self, pages) -> None:
         """Free a preemption victim's pages (contents live on in the host

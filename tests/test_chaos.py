@@ -66,8 +66,11 @@ def test_transient_chaos_absorbed_bit_identical(built):
     want = {f.uid: f.tokens for f in
             clean.run([dataclasses.replace(r) for r in reqs])}
 
+    # Restore lands at step 7: the cost-model victim is the CHEAPEST
+    # lowest-priority slot (uid 0, 2 private pages), and its re-admission
+    # waits for uid 1's slot to free after the HP request is served.
     chaos = ChaosInjector(ChaosConfig(deny_alloc_steps=(0,), fail_steps=(3,),
-                                      fail_restore_steps=(6,)))
+                                      fail_restore_steps=(7,)))
     eng = StemEngine(bundle, params, STEM, ecfg, chaos=chaos)
     fin = eng.run(reqs)
 

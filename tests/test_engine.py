@@ -213,6 +213,41 @@ def test_unified_step_trace_counts(built):
     assert mono.stats["prefill_traces"] == 3
 
 
+def test_admission_control_rejects_infeasible_ttft(built):
+    """SLO-aware admission control (opt-in): with the measured step time
+    making a request's TTFT SLO unreachable, the request is rejected up
+    front with an explicit error — no pages allocated, no silent SLO miss.
+    Off by default; requests without a TTFT SLO are never rejected."""
+    bundle, params = built
+    rng = np.random.RandomState(41)
+    prompt = rng.randint(0, TINY.vocab_size, size=(13,)).astype(np.int32)
+    mk = lambda **kw: Request(uid=0, prompt=prompt.copy(),
+                              max_new_tokens=4, **kw)
+    ecfg = dataclasses.replace(_ecfg(2, 1.0), admission_control=True)
+
+    eng = StemEngine(bundle, params, STEM, ecfg)
+    eng.monitor.ema = 10.0            # 10 s/step: any tight SLO is infeasible
+    fin = eng.run([mk(ttft_slo_s=0.05)])
+    assert fin[0].error is not None and fin[0].error.startswith("rejected")
+    assert fin[0].tokens == []
+    assert eng.stats["admission_rejects"] == 1
+    assert eng.allocator.available == ecfg.num_pages - 1, \
+        "rejected request left pages allocated"
+
+    # Control: same request, same fake EMA, flag off -> runs to completion.
+    off = StemEngine(bundle, params, STEM, _ecfg(2, 1.0))
+    off.monitor.ema = 10.0
+    fin_off = off.run([mk(ttft_slo_s=0.05)])
+    assert fin_off[0].error is None and len(fin_off[0].tokens) == 4
+    assert off.stats["admission_rejects"] == 0
+
+    # No TTFT SLO -> admission control never rejects, however slow.
+    eng2 = StemEngine(bundle, params, STEM, ecfg)
+    eng2.monitor.ema = 10.0
+    fin2 = eng2.run([mk()])
+    assert fin2[0].error is None and len(fin2[0].tokens) == 4
+
+
 def test_append_token_matches_prefill_pages():
     """Paged incremental summaries: growing a sequence token-by-token via
     ``append_token`` must reproduce ``write_prefill_pages`` of the full

@@ -239,6 +239,43 @@ def test_preemption_disabled_keeps_fcfs_order(built):
         eng.allocator.check_conservation([])
 
 
+def test_preemption_victim_minimizes_restore_cost(built):
+    """Victim choice is a cost model, not just recency: among the lowest
+    strictly-lower priority class the engine evicts the request with the
+    fewest PRIVATE pages — the cheapest host round-trip (shared prefix
+    pages never move).  Pinned: small request in slot 0 and big request in
+    slot 1, both priority 0 and admitted the same step; a pure recency/slot
+    tie-break would evict slot 1, the cost model must evict slot 0."""
+    bundle, params = built
+    rng = np.random.RandomState(31)
+    small = Request(uid=0, prompt=rng.randint(0, 64, size=(5,)).astype(np.int32),
+                    max_new_tokens=3)                    # 1 page
+    big = Request(uid=1, prompt=rng.randint(0, 64, size=(20,)).astype(np.int32),
+                  max_new_tokens=8)                      # 4 pages
+    hp = Request(uid=2, prompt=rng.randint(0, 64, size=(13,)).astype(np.int32),
+                 max_new_tokens=4, priority=1, arrival_step=2)
+    per_slot = -(-28 // STEM.block_size)
+    ecfg = EngineConfig(max_slots=2, num_pages=1 + 3 * per_slot,
+                        max_pages_per_slot=per_slot)
+
+    refs = {}
+    for r in (small, big, hp):
+        solo = StemEngine(bundle, params, STEM, ecfg)
+        refs[r.uid] = solo.run([Request(uid=r.uid, prompt=r.prompt,
+                                        max_new_tokens=r.max_new_tokens)])[0]
+
+    eng = StemEngine(bundle, params, STEM, ecfg)
+    fin = eng.run([dataclasses.replace(small), dataclasses.replace(big),
+                   dataclasses.replace(hp)])
+    assert eng.stats["preemptions"] == 1 and eng.stats["restores"] == 1
+    assert fin[0].preemptions == 1, \
+        "victim was not the cheapest-restore (fewest private pages) request"
+    assert fin[1].preemptions == 0
+    for f in fin:
+        assert f.tokens == refs[f.uid].tokens and f.error is None
+    eng.allocator.check_conservation([])
+
+
 def test_allocator_evict_restore_conservation():
     a = PageAllocator(8)
     held = a.alloc(3)

@@ -332,6 +332,57 @@ def test_cached_lru_reclaim_invalidates_index():
     a.check_conservation(got + [p])
 
 
+def test_hit_rate_eviction_keeps_hot_pages():
+    """evict_policy='hit-rate': reclaim cannibalizes the cached page with
+    the fewest prefix hits since registration, LRU among ties — a hot
+    system-prompt page survives pressure that LRU would evict it under."""
+    a = PageAllocator(5, evict_policy="hit-rate")
+    pages = a.alloc(4)
+    keys = prefix_page_keys(list(range(4 * BS)), [1, 1, 1, 1], BS)
+    for p, k in zip(pages, keys):
+        a.register(p, k)
+    a.free(pages)                   # all cached; LRU order p0, p1, p2, p3
+    # Make p0 the HOTTEST page (2 hits vs 1 each) that is also the OLDEST
+    # cached page (every later share/free re-parks the others after it) —
+    # exactly the page LRU reclaims first and hit-rate must keep.
+    a.free([a.share(pages[0])])
+    a.free([a.share(pages[0])])
+    for p in pages[1:]:
+        a.free([a.share(p)])        # LRU order is now p0, p1, p2, p3 again
+    got = a.alloc(3)                # reclaims the three 1-hit pages
+    assert sorted(got) == sorted(pages[1:])
+    assert a.probe(keys[0]) == pages[0], "hot page evicted under hit-rate"
+    for k in keys[1:]:
+        assert a.probe(k) is None
+    a.check_conservation(got)
+    # hit counts die with the registration: a reclaimed page re-registered
+    # later starts cold.
+    a.register(got[0], "fresh")
+    a.free([got[0]])
+    assert a._hits.get(got[0], 0) == 0
+
+
+def test_eviction_policy_default_and_validation():
+    """LRU stays the default (bit-for-bit the pre-flag behavior) and the
+    config rejects unknown policies."""
+    assert PageAllocator(4).evict_policy == "lru"
+    with pytest.raises(ValueError):
+        PageAllocator(4, evict_policy="belady")
+    # Same pressure as the hit-rate test under the default: the hot-but-old
+    # page is reclaimed first — the behavior the flag exists to change.
+    a = PageAllocator(5)
+    pages = a.alloc(4)
+    keys = prefix_page_keys(list(range(4 * BS)), [1, 1, 1, 1], BS)
+    for p, k in zip(pages, keys):
+        a.register(p, k)
+    a.free(pages)
+    a.free([a.share(pages[0])])
+    a.free([a.share(pages[0])])
+    for p in pages[1:]:
+        a.free([a.share(p)])        # p0 hottest AND oldest, as above
+    assert pages[0] in a.alloc(1), "LRU default no longer oldest-first"
+
+
 def test_register_idempotent_first_writer_wins():
     a = PageAllocator(4)
     p, q = a.alloc(2)

@@ -1,4 +1,19 @@
-"""Sharding rules: shape-aware resolution, ZeRO-1 upgrades, cache layouts."""
+"""Sharding: rule resolution + the mesh-sharded serving engine.
+
+Part 1 — sharding rules: shape-aware resolution, ZeRO-1 upgrades, cache
+layouts (the training-side spec machinery).
+
+Part 2 — mesh-sharded serving (``sharding/serving.py``): one engine over a
+``(dp, tp)`` mesh — page pools tensor-parallel over the KV-head axis,
+slot groups data-parallel — must be **bit-for-bit** the single-device
+engine: identical greedy streams for every mesh shape, identical restored
+page bytes through a tp>1 preempt/restore round-trip, and exactly the same
+two compiled traces.  Per-KV-head page selection is what makes tp sharding
+communication-free up to the attention-output all-gather; these tests are
+the proof.
+"""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,8 +21,14 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.configs.base import ArchConfig
+from repro.core import policy as policy_lib
+from repro.core.config import StemConfig
 from repro.models import registry
+from repro.runtime import offload as offload_lib
+from repro.runtime.engine import EngineConfig, Request, StemEngine
 from repro.sharding import rules as rules_lib
+from repro.sharding import serving as serving_lib
 
 # Capability gate: these tests build (2,4) and (2,2,2) meshes, so they need
 # >= 8 devices.  On a plain CPU host run them with the forced host-device
@@ -102,3 +123,175 @@ def test_batch_sharding_respects_divisibility():
     spec = {"tokens": jax.ShapeDtypeStruct((1, 128), jnp.int32)}   # batch 1
     sh = rules_lib.batch_sharding(cfg, mesh, spec)
     assert sh["tokens"].spec == P()   # batch=1 can't shard over data=2
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded serving (sharding/serving.py + runtime/engine.py)
+# ---------------------------------------------------------------------------
+
+TINY = ArchConfig(
+    name="mesh-tiny", family="dense", num_layers=2, d_model=32,
+    num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+    qk_norm=True, dtype="float32",
+)
+STEM_SRV = StemConfig(block_size=8, sink_blocks=1, local_blocks=1,
+                      min_budget_blocks=2, stride=4)
+TRACE = [  # (prompt_len, max_new_tokens, arrival_step) — mixed + staggered
+    (5, 4, 0),
+    (13, 6, 0),
+    (8, 3, 1),
+    (20, 5, 3),
+    (9, 4, 5),
+]
+
+
+@pytest.fixture(scope="module")
+def served():
+    bundle = registry.build(TINY)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+def _serve_requests():
+    rng = np.random.RandomState(7)
+    return [Request(uid=i,
+                    prompt=rng.randint(0, TINY.vocab_size,
+                                       size=(p,)).astype(np.int32),
+                    max_new_tokens=m, arrival_step=a)
+            for i, (p, m, a) in enumerate(TRACE)]
+
+
+def _serve_ecfg(max_slots=2, **kw):
+    per_slot = -(-max(p + n for p, n, _ in TRACE) // STEM_SRV.block_size)
+    return EngineConfig(max_slots=max_slots,
+                        num_pages=1 + 2 * max_slots * per_slot,
+                        max_pages_per_slot=per_slot, **kw)
+
+
+@pytest.mark.parametrize("mesh", [(1, 2), (2, 1), (2, 2)])
+def test_mesh_engine_bitwise_vs_single_device(served, mesh):
+    """The whole point of the sharding layer: dp slot groups x tp KV-head
+    shards must reproduce the single-device engine token-for-token (same
+    trace, same staggered arrivals), with the same TWO compiled traces.
+    dp>1 additionally moves requests into different slot groups than the
+    single-device run packs them — so this doubles as batch-invariance
+    across group placement."""
+    bundle, params = served
+    ref = StemEngine(bundle, params, STEM_SRV, _serve_ecfg()).run(
+        _serve_requests())
+    eng = StemEngine(bundle, params, STEM_SRV, _serve_ecfg(mesh=mesh))
+    got = eng.run(_serve_requests())
+    assert eng.groups == mesh[0]
+    assert eng.total_slots == mesh[0] * 2
+    for r, g in zip(ref, got):
+        assert r.tokens == g.tokens, \
+            f"uid {r.uid} diverged under mesh {mesh}"
+        assert g.error is None
+    assert eng.stats["traces"] == 2, "mesh added unified-step traces"
+    # drain: every group's pages back, none orphaned
+    for alloc in eng.allocators:
+        alloc.check_conservation([])
+
+
+def test_mesh_pallas_matches_single_device_xla(served):
+    """Differential across BOTH executors under the mesh: the fused Pallas
+    kernels read their KV-head extent from the (local) pool shard, so the
+    same registration serves tp-sharded pools unchanged."""
+    bundle, params = served
+    ref = StemEngine(bundle, params, STEM_SRV, _serve_ecfg()).run(
+        _serve_requests())
+    for executor in ("xla", "pallas"):
+        eng = StemEngine(bundle, params, STEM_SRV,
+                         _serve_ecfg(mesh=(2, 2), executor=executor))
+        got = eng.run(_serve_requests())
+        for r, g in zip(ref, got):
+            assert r.tokens == g.tokens, \
+                f"uid {r.uid} diverged (executor={executor})"
+
+
+def test_mesh_preempt_restore_roundtrip_tp2(served):
+    """Preempt -> per-shard host snapshot keyed by mesh coordinate ->
+    restore into fresh pages must be bit-identical under tp>1: same shard
+    bytes at the same (dp, tp) coordinates, same resumed stream, zero
+    extra traces."""
+    bundle, params = served
+    rng = np.random.RandomState(17)
+    prompt = rng.randint(0, TINY.vocab_size, size=(20,)).astype(np.int32)
+    mk = lambda: Request(uid=0, prompt=prompt.copy(), max_new_tokens=8)
+    ecfg = _serve_ecfg(max_slots=1, budget_frac=0.5)
+
+    ref = StemEngine(bundle, params, STEM_SRV, ecfg).run([mk()])[0]
+
+    eng = StemEngine(bundle, params, STEM_SRV,
+                     dataclasses.replace(ecfg, mesh=(1, 2)))
+    eng.submit(mk())
+    for _ in range(4):
+        eng.step()
+    assert eng.slots[0] is not None and eng.slots[0].phase == "decode"
+    eng.preempt(0)
+    eng.allocators[0].check_conservation([])
+    snap_host = eng.host_store.get(0)
+    for leaf in jax.tree.leaves(
+            snap_host, is_leaf=lambda x: isinstance(x, offload_lib.HostShards)):
+        assert isinstance(leaf, offload_lib.HostShards)
+        assert sorted(leaf.shards) == [(0, 0), (0, 1)], \
+            "snapshot not keyed by (dp, tp) mesh coordinate"
+    traces_before = eng.stats["traces"]
+
+    eng._admit()
+    assert eng.slots[0] is not None and not eng.preempted
+    assert eng.stats["traces"] == traces_before, "restore retraced"
+    # Page-for-page, shard-for-shard: re-extracting the restored pages
+    # returns the offloaded bytes at the same mesh coordinates.
+    W = eng.ecfg.max_pages_per_slot
+    rows = np.zeros((eng.groups, W), np.int32)
+    rows[0, :len(eng.slot_pages[0])] = eng.slot_pages[0]
+    back = offload_lib.shard_snapshot_to_host(
+        eng._extract(eng.pools, jnp.asarray(rows)), eng.smesh, 0)
+    for got, want in zip(
+            jax.tree.leaves(back, is_leaf=lambda x: isinstance(
+                x, offload_lib.HostShards)),
+            jax.tree.leaves(snap_host, is_leaf=lambda x: isinstance(
+                x, offload_lib.HostShards))):
+        assert sorted(got.shards) == sorted(want.shards)
+        for c in want.shards:
+            assert np.array_equal(got.shards[c], want.shards[c]), \
+                f"restored shard {c} differs from snapshot"
+
+    out = eng.run()[0]
+    assert out.tokens == ref.tokens, "tp=2 preempt/restore diverged"
+    assert out.preemptions == 1 and eng.stats["traces"] == 2
+    eng.allocators[0].check_conservation([])
+
+
+def test_mesh_executor_sharding_contract(served):
+    """tp>1 requires the executor to declare per-KV-head independence
+    ('kv-head'); a 'replicated' executor must be rejected up front, not
+    silently produce garbage.  Both shipped executors declare it."""
+    bundle, params = served
+    for name in ("xla", "pallas"):
+        assert policy_lib.get_paged_executor(name).sharding == "kv-head"
+    spec = policy_lib.get_paged_executor("xla")
+    policy_lib.register_paged_executor(
+        "replicated-probe", decode_fn=spec.decode_fn, chunk_fn=spec.chunk_fn,
+        sharding="replicated", overwrite=True)
+    with pytest.raises(ValueError, match="kv-head"):
+        StemEngine(bundle, params, STEM_SRV,
+                   _serve_ecfg(mesh=(1, 2), executor="replicated-probe"))
+    # dp-only meshes never touch the head axis: replicated executors fine.
+    eng = StemEngine(bundle, params, STEM_SRV,
+                     _serve_ecfg(mesh=(2, 1), executor="replicated-probe"))
+    got = eng.run(_serve_requests())
+    ref = StemEngine(bundle, params, STEM_SRV, _serve_ecfg()).run(
+        _serve_requests())
+    assert all(r.tokens == g.tokens for r, g in zip(ref, got))
+
+
+def test_mesh_rejects_bad_shapes(served):
+    """Config validation: kv heads (2) not divisible by tp, or a mesh
+    bigger than the device count, fails loudly at engine construction."""
+    bundle, params = served
+    with pytest.raises(ValueError):
+        StemEngine(bundle, params, STEM_SRV, _serve_ecfg(mesh=(1, 3)))
+    with pytest.raises(ValueError):
+        StemEngine(bundle, params, STEM_SRV, _serve_ecfg(mesh=(16, 2)))
