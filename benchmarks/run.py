@@ -13,9 +13,11 @@ accuracy benchmarks).  Mapping to the paper:
   ragged_exec.py          padded vs ragged/deduped executor A/B (DESIGN.md;
                           also writes BENCH_ragged.json standalone)
   serving.py              continuous-batching engine A/Bs: stem-on vs
-                          stem-off (BENCH_serving.json) and chunked vs
+                          stem-off (BENCH_serving.json), chunked vs
                           monolithic prefill under a mixed workload
-                          (``--chunked``, BENCH_chunked.json)
+                          (``--chunked``, BENCH_chunked.json), and the
+                          async-vs-sync engine loop (``--async``,
+                          BENCH_async.json, bit-identity gated)
   policy_parity.py        named SparsityPolicy stack (stem / uniform-sam /
                           streaming) through the shared executor (writes
                           BENCH_policy.json standalone)

@@ -33,9 +33,18 @@ Two studies, both on the paged Stem KV cache (``runtime/engine.py``):
      the SLO arm under fault injection (alloc denial, step failure,
      restore failure) — the resilience configuration CI exercises.
 
+  4. **sync vs async engine loop** (``--async``, ``BENCH_async.json``) —
+     the same engine under ``async_depth`` 0 vs 1: the sync arm fetches
+     full logits and blocks the host every step; the async arm samples
+     on device, transfers only ``(slots,) int32`` ids, and dispatches
+     step N+1 while step N's ids are in flight.  Streams are asserted
+     bit-identical in-bench; reported per arm: decode tok/s, blocking
+     host syncs per token (O(steps) -> O(finished requests)), and the
+     host dispatch / sync-wait time split.
+
 Standalone: ``PYTHONPATH=src python benchmarks/serving.py [--quick]
-[--chunked] [--slo [--chaos]]``.  All reports feed CI's perf-trajectory
-artifacts.
+[--chunked] [--slo [--chaos]] [--async]``.  All reports feed CI's
+perf-trajectory artifacts.
 """
 from __future__ import annotations
 
@@ -501,6 +510,148 @@ def run_slo_bench(quick: bool, chaos: bool = False) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Async vs sync engine loop (BENCH_async.json)
+# ---------------------------------------------------------------------------
+
+def run_async_arm(bundle, params, stem_cfg, *, async_depth: int,
+                  max_slots: int, min_prompt: int, max_prompt: int,
+                  decode_tokens: int, seed: int = 0, reps: int = 3):
+    """One loop arm (sync oracle / async pipeline) over the same staggered
+    trace.  Runs the timed trace ``reps`` times and keeps the fastest —
+    single-core hosts jitter enough run-to-run to swamp the loop delta
+    otherwise.  Returns the metrics cell plus the full token streams so
+    the caller can assert the two arms are bit-identical — the A/B is
+    invalid if the async pipeline changed a single token."""
+    from repro.launch.serve import _latency_stats, build_trace
+    from repro.runtime.engine import EngineConfig, StemEngine
+
+    ecfg = EngineConfig.for_trace(
+        max_slots=max_slots, max_prompt=max_prompt,
+        max_new_tokens=decode_tokens, page_size=stem_cfg.block_size,
+        budget_frac=STEM_BUDGET, async_depth=async_depth)
+    engine = StemEngine(bundle, params, stem_cfg, ecfg)
+    mk_trace = lambda: build_trace(
+        np.random.RandomState(seed), 2 * max_slots, min_prompt, max_prompt,
+        decode_tokens, bundle.cfg.vocab_size, arrival_every=1)
+
+    engine.run(mk_trace())          # warmup: compile both unified traces
+    wall, finished, s = None, None, None
+    for _ in range(reps):
+        engine.reset_metrics()
+        trace = mk_trace()
+        for r in trace:
+            r.arrival_step += engine.step_count
+        t0 = time.perf_counter()
+        fin = engine.run(trace)
+        w = time.perf_counter() - t0
+        if wall is None or w < wall:
+            wall, finished, s = w, fin, dict(engine.stats)
+    total_tokens = sum(len(f.tokens) for f in finished)
+    decode_tok = s["tokens_generated"]
+    # The transfer the pipeline eliminates: the sync loop fetches full
+    # (slots, vocab) float32 logits every step; the async loop fetches
+    # (slots,) int32 ids — vocab-independent.
+    T = engine.total_slots
+    fetch_bytes = (T * 4 if async_depth
+                   else T * bundle.cfg.vocab_size * 4)
+    cell = {
+        "arm": "async" if async_depth else "sync",
+        "async_depth": async_depth,
+        "fetch_bytes_per_step": fetch_bytes,
+        "requests": len(finished),
+        "total_tokens": total_tokens,
+        "wall_s": wall,
+        "throughput_tok_s": total_tokens / max(wall, 1e-9),
+        "decode_tok_s": decode_tok / max(wall, 1e-9),
+        "host_syncs": s["host_syncs"],
+        "host_syncs_per_token": s["host_syncs"] / max(decode_tok, 1),
+        "id_fetches": s["id_fetches"],
+        "lookahead_discards": s["lookahead_discards"],
+        "dispatch_s": s["dispatch_s"],
+        "sync_wait_s": s["sync_wait_s"],
+        "traces": s["traces"],
+        **_latency_stats(finished),
+    }
+    return cell, {f.uid: list(f.tokens) for f in finished}
+
+
+def run_async_bench(quick: bool) -> dict:
+    """Engine-loop A/B: the synchronous oracle (host argmax over fetched
+    logits, one blocking sync per step) vs the async pipeline (on-device
+    sampling, token-id-only transfers, one-step-lookahead dispatch).  Two
+    workloads: *decode-heavy* (short prompts, long decode — every step
+    pays the host sync, the regime the pipeline targets) and *mixed*
+    (the standard staggered trace).  Both arms must produce bit-identical
+    streams; the headline is the decode-heavy decode-throughput ratio and
+    the host-sync collapse from O(steps) to O(finished requests).
+
+    Reading the speedup honestly: the wall-clock win comes from
+    overlapping host work with device compute and from not moving /
+    host-sampling a (slots, vocab) logits tensor per step.  On a
+    multi-core host driving an accelerator both effects are real
+    (target: >= 1.2x decode tok/s).  On a single-core CPU host neither
+    exists — host and 'device' time-slice one core and the logits fetch
+    is a zero-copy view — so wall-clock lands at parity-to-modest
+    (~1.0-1.1x) and the structural metrics (host syncs per token, fetch
+    bytes per step) carry the comparison; ``speedup_target_met`` records
+    which regime produced the committed report."""
+    import jax
+    from repro.models import registry
+
+    cfg = QUICK_ARCH if quick else FULL_ARCH
+    stem_cfg = _stem_cfg(quick)
+    bundle = registry.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    bs = stem_cfg.block_size
+    workloads = {
+        "decode_heavy": dict(max_slots=4, min_prompt=bs, max_prompt=2 * bs,
+                             decode_tokens=32 if quick else 160),
+        "mixed": dict(max_slots=4, min_prompt=24 if quick else 64,
+                      max_prompt=96 if quick else 384,
+                      decode_tokens=8 if quick else 32),
+    }
+
+    cells = []
+    speedups = {}
+    for wname, kw in workloads.items():
+        arms = {}
+        for depth in (0, 1):
+            cell, tokens = run_async_arm(bundle, params, stem_cfg,
+                                         async_depth=depth, **kw)
+            cell["workload"] = wname
+            arms[cell["arm"]] = (cell, tokens)
+            cells.append(cell)
+            print(f"{wname:>12}/{cell['arm']:>5}: "
+                  f"{cell['decode_tok_s']:8.1f} decode tok/s, "
+                  f"host syncs {cell['host_syncs']:>4} "
+                  f"({cell['host_syncs_per_token']:.3f}/tok), "
+                  f"dispatch {cell['dispatch_s']:.2f}s "
+                  f"wait {cell['sync_wait_s']:.2f}s", flush=True)
+        assert arms["sync"][1] == arms["async"][1], (
+            f"{wname}: async streams diverged from the sync oracle")
+        speedups[wname] = (arms["async"][0]["decode_tok_s"]
+                           / max(arms["sync"][0]["decode_tok_s"], 1e-9))
+        print(f"{wname:>12}: bit-identical, async speedup "
+              f"{speedups[wname]:.2f}x", flush=True)
+    import os
+    return {
+        "benchmark": "serving_async",
+        "mode": "quick" if quick else "full",
+        "backend": jax.default_backend(),
+        "host_cores": os.cpu_count(),
+        "arch": cfg.name,
+        "block_size": bs,
+        "budget_frac": STEM_BUDGET,
+        "workloads": {k: dict(v) for k, v in workloads.items()},
+        "bit_identical": True,
+        "cells": cells,
+        "async_decode_speedup": speedups,
+        "speedup_target": 1.2,
+        "speedup_target_met": speedups["decode_heavy"] >= 1.2,
+    }
+
+
 def run(quick: bool = True):
     """benchmarks/run.py entry point: CSV rows per cell (both studies)."""
     rows = []
@@ -530,6 +681,15 @@ def run(quick: bool = True):
             f"hp_ttft_ms={c['hp_ttft_ms_mean']:.1f};"
             f"preempt={c['preemptions']};deferrals={c['decode_deferrals']}",
         ))
+    async_rep = run_async_bench(quick)
+    for c in async_rep["cells"]:
+        rows.append((
+            f"serving/async/{c['workload']}/{c['arm']}",
+            c["tpot_ms_mean"] * 1e3,
+            f"decode_tok_s={c['decode_tok_s']:.1f};"
+            f"host_syncs={c['host_syncs']};"
+            f"syncs_per_tok={c['host_syncs_per_token']:.3f}",
+        ))
     return rows
 
 
@@ -546,10 +706,17 @@ def main() -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="with --slo: run the SLO arm under fault injection "
                          "(alloc denial, step failure, restore failure)")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="run the engine-loop A/B: sync oracle vs the async "
+                         "pipeline (on-device sampling, id-only transfers, "
+                         "one-step lookahead) (BENCH_async.json)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    if args.slo:
+    if args.async_:
+        report = run_async_bench(args.quick)
+        out = args.out or "BENCH_async.json"
+    elif args.slo:
         report = run_slo_bench(args.quick, chaos=args.chaos)
         out = args.out or "BENCH_slo.json"
     elif args.chunked:

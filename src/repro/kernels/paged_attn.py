@@ -71,6 +71,26 @@ NEG_INF = -1e30
 # Flip to False on real TPU hardware (launch scripts do this via env).
 INTERPRET = True
 
+# Process-wide tally of silent XLA fallbacks, keyed by call site
+# ("decode" / "chunk").  Fallbacks fire at TRACE time (once per engine
+# signature, not per step); ``StemEngine`` snapshots this at init and
+# surfaces the delta as ``stats["pallas_fallbacks"]``, and the first hit
+# per site warns so an operator asking for "pallas" learns they are
+# running the oracle.
+FALLBACKS: dict = {}
+_WARNED: set = set()
+
+
+def _note_fallback(site: str, reason: str) -> None:
+    FALLBACKS[site] = FALLBACKS.get(site, 0) + 1
+    if site not in _WARNED:
+        _WARNED.add(site)
+        import warnings
+        warnings.warn(
+            f"fused_paged_{site}: falling back to the XLA gather oracle "
+            f"({reason}); counted in engine.stats['pallas_fallbacks']",
+            RuntimeWarning, stacklevel=3)
+
 
 def _resolve_interpret(interpret):
     return INTERPRET if interpret is None else interpret
@@ -368,6 +388,8 @@ def fused_paged_decode(q, pool, page_table, cache_lens, cfg,
         budget_frac = DEFAULT_BUDGET_FRAC
     kind = _metric_kind(policy.metric)
     if kind is None:
+        _note_fallback(
+            "decode", f"unsupported metric {type(policy.metric).__name__}")
         from repro.runtime import paged as paged_lib
         return paged_lib.paged_sparse_decode(
             q, pool, page_table, cache_lens, policy, budget_frac,
@@ -417,6 +439,10 @@ def fused_paged_chunk(q, pool, page_table, chunk_start, budgets, cfg,
     pooling = getattr(policy.metric, "pooling", "antidiag")
     if kind is None or (kind == "routing" and pooling not in ("antidiag",
                                                               "mean")):
+        _note_fallback(
+            "chunk",
+            (f"unsupported metric {type(policy.metric).__name__}"
+             if kind is None else f"unsupported pooling {pooling!r}"))
         return chunked_lib.chunked_prefill_attention(
             q, pool, page_table, chunk_start, budgets, policy, k_max,
             executor="xla")

@@ -110,7 +110,9 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
         max_waiting=args.max_waiting or None,
         executor=args.executor or None,
         mesh=mesh,
-        admission_control=args.admission_control)
+        admission_control=args.admission_control,
+        async_depth=args.async_depth,
+        sampler=args.sampler)
     chaos = None
     if args.chaos:
         from repro.runtime.chaos import ChaosConfig, ChaosInjector
@@ -135,6 +137,7 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
     out = {
         "mode": "engine",
         "prefill": "monolithic" if args.monolithic else "chunked",
+        "loop": "async" if ecfg.async_depth else "sync",
         "scheduler": ecfg.scheduler,
         "mesh": list(mesh) if mesh else None,
         "chunk_size": engine.chunk_size,
@@ -154,7 +157,8 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
         "tokens": {f.uid: f.tokens for f in finished},
         **stats,
     }
-    print(f"engine ({out['prefill']}, {ecfg.scheduler}): {len(finished)} "
+    print(f"engine ({out['prefill']}, {out['loop']}, {ecfg.scheduler}): "
+          f"{len(finished)} "
           f"reqs ({len(failed)} failed), {total_tokens} "
           f"tokens in {wall*1e3:.0f} ms -> {out['throughput_tok_s']:.1f} "
           f"tok/s; TTFT {out['ttft_ms_mean']:.1f} ms; TPOT "
@@ -165,6 +169,13 @@ def run_engine(args, cfg, bundle, params, stem_cfg, budget_frac):
           f"slots reused {engine.stats['slots_reused']}, "
           f"max concurrency {engine.stats['max_concurrency']}", flush=True)
     s = engine.stats
+    if ecfg.async_depth:
+        print(f"  async: depth {ecfg.async_depth}, blocking host syncs "
+              f"{s['host_syncs']} over {s['id_fetches']} id fetches, "
+              f"lookahead discards {s['lookahead_discards']}", flush=True)
+    if s["pallas_fallbacks"]:
+        print(f"  pallas: {s['pallas_fallbacks']} call site(s) fell back to "
+              f"the XLA oracle", flush=True)
     if any(s[k] for k in ("preemptions", "shed", "aborts", "step_failures",
                           "restore_failures", "straggler_steps")):
         print(f"  resilience: preemptions {s['preemptions']} "
@@ -197,6 +208,7 @@ def run_fixed_batch(args, cfg, bundle, params, stem_cfg, budget_frac=1.0):
     from repro.core import policy as policy_lib
     from repro.launch import steps as steps_lib
     from repro.models import transformer
+    from repro.runtime import sampling as sampling_lib
 
     # Right-padded ragged prompts are only sound for global-attention
     # mixers: per-row masking hides padding K/V, and decode overwrites it.
@@ -224,26 +236,31 @@ def run_fixed_batch(args, cfg, bundle, params, stem_cfg, budget_frac=1.0):
     for i, L in enumerate(lens):
         toks[i, :L] = rng.randint(0, cfg.vocab_size, size=(int(L),))
 
+    # Same on-device sampling op as the engine (runtime/sampling.py) —
+    # the sampled ids stay on device between steps and only the int32
+    # ids are pulled to host, never the (b, vocab) logits.
+    sampler = sampling_lib.get_sampler(getattr(args, "sampler", "greedy"))
     prefill = jax.jit(lambda p, b, lp: bundle.prefill(
         p, b, max_len=max_len, stem_cfg=stem_cfg, last_pos=lp))
     serve = jax.jit(
         steps_lib.make_serve_step(bundle, stem_cfg=stem_cfg,
                                   budget_frac=budget_frac),
         donate_argnums=(2,), static_argnames=())
+    sample = jax.jit(lambda lg: sampler(lg)[:, None])
 
     t0 = time.perf_counter()
     batch = {"tokens": jnp.asarray(toks)}
     logits, caches = jax.block_until_ready(
         prefill(params, batch, jnp.asarray(lens - 1)))
     ttft = time.perf_counter() - t0
-    toks_step = jnp.argmax(logits, axis=-1)[:, None]
+    toks_step = sample(logits)
     out_tokens = [np.asarray(toks_step)]
     t1 = time.perf_counter()
     cache_lens = jnp.asarray(lens)
     for i in range(args.decode_tokens - 1):
         logits, caches = serve(params, toks_step, caches,
                                cache_lens if i == 0 else None)
-        toks_step = jnp.argmax(logits, axis=-1)[:, None]
+        toks_step = sample(logits)
         out_tokens.append(np.asarray(toks_step))
     jax.block_until_ready(toks_step)
     dt = time.perf_counter() - t1
@@ -324,6 +341,14 @@ def main(argv=None) -> dict:
                     help="reject waiting requests whose TTFT SLO is "
                          "infeasible at the measured step time (explicit "
                          "error instead of a silent SLO miss)")
+    ap.add_argument("--async-depth", type=int, default=0,
+                    help="0 = synchronous engine loop (the differential "
+                         "oracle); 1 = async pipeline: on-device sampling, "
+                         "token-id-only transfers, one-step-lookahead "
+                         "dispatch (bit-identical streams)")
+    ap.add_argument("--sampler", default="greedy",
+                    help="registered on-device sampler "
+                         "(runtime/sampling.py); greedy = argmax")
     ap.add_argument("--chaos", action="store_true",
                     help="inject a fixed fault plan (alloc denial, step "
                          "failure, restore failure) — resilience demo; the "

@@ -144,7 +144,8 @@ def make_serve_step(bundle: registry.ModelBundle, *, stem_cfg=None,
 
 def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
                       budget_frac: float = 1.0, chunk_k_max: int = 0,
-                      executor=None, on_trace=None, smesh=None):
+                      executor=None, on_trace=None, smesh=None,
+                      sampler=None):
     """The engine's single step: (params, pools, tokens (S,1),
     page_table (S,P), cache_lens (S,), chunk) ->
     (decode logits (S, vocab), chunk logits (S, vocab) | None, pools).
@@ -167,7 +168,19 @@ def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
     slice, and each tp shard computes its KV-head block with one
     all-gather at the attention output (``sharding/serving.py``).  Still
     exactly two traces, and bitwise identical per group to the
-    single-device step."""
+    single-device step.
+
+    With ``sampler`` (``runtime/sampling.py``) the builder returns the
+    SAMPLED signature instead — the async engine's step: (params, pools,
+    token_buf (S,), dec_mask (S,), page_table, cache_lens, chunk) ->
+    (dec_ids (S,), chunk_ids (L,) | None, token_buf', pools).  Sampling
+    runs inside the trace (``transformer.paged_sampled_step``), decode
+    inputs come from the device-resident ``token_buf``, and the only
+    per-step transfer left is the int32 id arrays.  Under the mesh,
+    ``token_buf`` / ``dec_mask`` gain the (dp,) slot-group axis like
+    every other batch argument, and the tiny replicated-over-tp id
+    arrays replace the per-group logits fetch — the sampled mesh step
+    moves O(slots) bytes to the host instead of O(slots * vocab)."""
     cfg = bundle.cfg
     transformer.assert_paged_servable(cfg)
 
@@ -177,14 +190,30 @@ def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
             stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=chunk,
             chunk_k_max=chunk_k_max, executor=executor)
 
+    def sampled_step(params, buf, mask, pools, page_table, cache_lens,
+                     chunk):
+        return transformer.paged_sampled_step(
+            params, buf, pools, page_table, cache_lens, mask, cfg,
+            stem_cfg=stem_cfg, sampler=sampler, budget_frac=budget_frac,
+            chunk=chunk, chunk_k_max=chunk_k_max, executor=executor)
+
     if smesh is None:
-        def unified_step(params, pools, tokens, page_table, cache_lens,
-                         chunk=None):
+        if sampler is None:
+            def unified_step(params, pools, tokens, page_table, cache_lens,
+                             chunk=None):
+                if on_trace is not None:
+                    on_trace()
+                return mixed_step(params, tokens, pools, page_table,
+                                  cache_lens, chunk)
+            return unified_step
+
+        def unified_sampled(params, pools, token_buf, dec_mask, page_table,
+                            cache_lens, chunk=None):
             if on_trace is not None:
                 on_trace()
-            return mixed_step(params, tokens, pools, page_table, cache_lens,
-                              chunk)
-        return unified_step
+            return sampled_step(params, token_buf, dec_mask, pools,
+                                page_table, cache_lens, chunk)
+        return unified_sampled
 
     from jax.experimental.shard_map import shard_map
 
@@ -209,33 +238,75 @@ def make_unified_step(bundle: registry.ModelBundle, *, stem_cfg,
             return dec, new_pools
         return jax.vmap(one)(pools, tokens, page_table, cache_lens)
 
+    # Sampled twins: same lane structure, id outputs + the fed-back token
+    # buffer instead of logits.  The ids are sampled from tp-replicated
+    # logits, so they are bitwise replicated over tp by construction.
+    def _mixed_sampled_body(params, pools, buf, mask, page_table,
+                            cache_lens, chunk):
+        def one(pools_g, buf_g, mask_g, table_g, lens_g, chunk_g):
+            return sampled_step(params, buf_g, mask_g, pools_g, table_g,
+                                lens_g, chunk_g)
+        return jax.vmap(one)(pools, buf, mask, page_table, cache_lens, chunk)
+
+    def _decode_sampled_body(params, pools, buf, mask, page_table,
+                             cache_lens):
+        def one(pools_g, buf_g, mask_g, table_g, lens_g):
+            ids, _, new_buf, new_pools = sampled_step(
+                params, buf_g, mask_g, pools_g, table_g, lens_g, None)
+            return ids, new_buf, new_pools
+        return jax.vmap(one)(pools, buf, mask, page_table, cache_lens)
+
     # check_rep=False: outputs are bitwise replicated over tp by
     # construction (full projections + all-gather before wo), which the
     # replication checker cannot prove through the collectives.
-    smapped_mixed = shard_map(
-        _mixed_body, mesh=smesh.mesh,
+    if sampler is None:
+        smapped_mixed = shard_map(
+            _mixed_body, mesh=smesh.mesh,
+            in_specs=(REP, POOL, GRP, GRP, GRP, GRP),
+            out_specs=(GRP, GRP, POOL), check_rep=False)
+        smapped_decode = shard_map(
+            _decode_body, mesh=smesh.mesh,
+            in_specs=(REP, POOL, GRP, GRP, GRP),
+            out_specs=(GRP, POOL), check_rep=False)
+
+        def unified_step(params, pools, tokens, page_table, cache_lens,
+                         chunk=None):
+            if on_trace is not None:
+                on_trace()
+            # The head-sharding context is active while jit traces the
+            # shard_map bodies, turning on the TP slicing inside
+            # models/attention.py for exactly this trace.
+            with serving_lib.head_sharding(smesh.tp):
+                if chunk is None:
+                    dec, new_pools = smapped_decode(params, pools, tokens,
+                                                    page_table, cache_lens)
+                    return dec, None, new_pools
+                return smapped_mixed(params, pools, tokens, page_table,
+                                     cache_lens, chunk)
+        return unified_step
+
+    smapped_mixed_s = shard_map(
+        _mixed_sampled_body, mesh=smesh.mesh,
+        in_specs=(REP, POOL, GRP, GRP, GRP, GRP, GRP),
+        out_specs=(GRP, GRP, GRP, POOL), check_rep=False)
+    smapped_decode_s = shard_map(
+        _decode_sampled_body, mesh=smesh.mesh,
         in_specs=(REP, POOL, GRP, GRP, GRP, GRP),
         out_specs=(GRP, GRP, POOL), check_rep=False)
-    smapped_decode = shard_map(
-        _decode_body, mesh=smesh.mesh,
-        in_specs=(REP, POOL, GRP, GRP, GRP),
-        out_specs=(GRP, POOL), check_rep=False)
 
-    def unified_step(params, pools, tokens, page_table, cache_lens,
-                     chunk=None):
+    def unified_sampled(params, pools, token_buf, dec_mask, page_table,
+                        cache_lens, chunk=None):
         if on_trace is not None:
             on_trace()
-        # The head-sharding context is active while jit traces the
-        # shard_map bodies, turning on the TP slicing inside
-        # models/attention.py for exactly this trace.
         with serving_lib.head_sharding(smesh.tp):
             if chunk is None:
-                dec, new_pools = smapped_decode(params, pools, tokens,
-                                                page_table, cache_lens)
-                return dec, None, new_pools
-            return smapped_mixed(params, pools, tokens, page_table,
-                                 cache_lens, chunk)
-    return unified_step
+                ids, buf, new_pools = smapped_decode_s(
+                    params, pools, token_buf, dec_mask, page_table,
+                    cache_lens)
+                return ids, None, buf, new_pools
+            return smapped_mixed_s(params, pools, token_buf, dec_mask,
+                                   page_table, cache_lens, chunk)
+    return unified_sampled
 
 
 def make_page_extract():
@@ -274,24 +345,30 @@ def make_page_copy():
 
 
 def make_monolithic_prefill(bundle: registry.ModelBundle, *, stem_cfg,
-                            on_trace=None):
+                            on_trace=None, sampler=None):
     """(params, tokens (1, Lp), true_len, pools, page_row) ->
-    (next-token logits (vocab,), pools).
+    (next-token logits (vocab,), pools) — or, with ``sampler``,
+    (sampled first token id (scalar int32), pools).
 
     The legacy one-shot admission prefill: one request, right-padded to a
     page multiple, scattered into the pools with its block summaries
     (``transformer.prefill_kv_pages``).  jit retraces one instance per
     padded-length bucket — kept as the A/B baseline for the unified
     chunked step (``benchmarks/serving.py --chunked``) and as the
-    fallback for threshold selectors that chunked prefill cannot serve."""
+    fallback for threshold selectors that chunked prefill cannot serve.
+    With ``sampler`` the first token is sampled on-device too, so the
+    admission fetch is one int32 instead of a vocab-sized logits row."""
     cfg = bundle.cfg
     transformer.assert_paged_servable(cfg)
 
     def monolithic_prefill(params, tokens, true_len, pools, page_row):
         if on_trace is not None:
             on_trace()
-        return transformer.prefill_kv_pages(params, tokens, true_len, pools,
-                                            page_row, cfg, stem_cfg)
+        logits, new_pools = transformer.prefill_kv_pages(
+            params, tokens, true_len, pools, page_row, cfg, stem_cfg)
+        if sampler is not None:
+            return sampler(logits), new_pools
+        return logits, new_pools
     return monolithic_prefill
 
 

@@ -764,6 +764,48 @@ def paged_mixed_step(params, tokens: jnp.ndarray, pools,
     return dec_logits, chunk_logits, new_pools
 
 
+def paged_sampled_step(params, token_buf: jnp.ndarray, pools,
+                       page_table: jnp.ndarray, cache_lens: jnp.ndarray,
+                       dec_mask: jnp.ndarray, cfg: ArchConfig, *, stem_cfg,
+                       sampler, budget_frac: float = 1.0, chunk=None,
+                       chunk_k_max: int = 0, executor=None):
+    """``paged_mixed_step`` with sampling fused into the trace — the async
+    engine's step.  Decode inputs come from ``token_buf`` (slots,), the
+    device-resident fed-back token buffer, instead of a host-built tokens
+    array; logits never leave the device — the sampler reduces them to
+    int32 ids in the same trace, and the buffer is advanced in place:
+
+      * decode lanes granted this step (``dec_mask`` (slots,) bool) write
+        their sampled id back into the buffer (the next step's input);
+        ungranted lanes keep their pending token;
+      * a chunk lane that completes a prefill (``chunk["emit"]`` (L,)
+        bool) scatters its sampled first token into ``chunk["slot"]``'s
+        buffer entry — the request's decode stream starts on-device too.
+
+    The only thing a host ever needs to fetch is the tiny id arrays
+    (``dec_ids`` (slots,), ``chunk_ids`` (L,)) — one int32 per lane
+    instead of a vocab-sized logits row.
+
+    Returns (dec_ids (slots,) int32, chunk_ids (L,) int32 | None,
+             new token_buf (slots,), new pools).
+    """
+    dec_logits, chunk_logits, new_pools = paged_mixed_step(
+        params, token_buf[:, None], pools, page_table, cache_lens, cfg,
+        stem_cfg=stem_cfg, budget_frac=budget_frac, chunk=chunk,
+        chunk_k_max=chunk_k_max, executor=executor)
+    dec_ids = sampler(dec_logits)
+    new_buf = jnp.where(dec_mask, dec_ids, token_buf)
+    chunk_ids = None
+    if chunk is not None:
+        chunk_ids = sampler(chunk_logits)
+        # Completed-prefill lanes feed their first token into the buffer;
+        # idle / mid-prompt lanes scatter out of bounds and are dropped.
+        slots = token_buf.shape[0]
+        target = jnp.where(chunk["emit"], chunk["slot"], slots)
+        new_buf = new_buf.at[target].set(chunk_ids, mode="drop")
+    return dec_ids, chunk_ids, new_buf, new_pools
+
+
 def paged_decode_step(params, tokens: jnp.ndarray, pools,
                       page_table: jnp.ndarray, cache_lens: jnp.ndarray,
                       cfg: ArchConfig, *, stem_cfg,

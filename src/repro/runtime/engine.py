@@ -73,11 +73,24 @@ of which slot it occupies, who its co-tenants are, how the token budget
 interleaves its chunks, and whether it was preempted and restored along
 the way.  ``tests/test_engine.py`` and ``tests/test_preemption.py`` pin
 this differentially.
+
+Async pipeline (``EngineConfig.async_depth=1``): sampling moves inside
+the jitted step (``runtime/sampling.py`` + ``paged_sampled_step``), the
+fed-back decode tokens live in a device-resident buffer, and the host
+dispatches step N+1 from the previous scheduler state while step N's
+sampled ids are still in flight — EOS is reconciled one step late, the
+single speculative step of a finished request writes only into its own
+still-reserved pages, and the emitted streams stay bit-identical to the
+``async_depth=0`` synchronous oracle (``tests/test_async_engine.py``).
+The only per-step transfer is the ``(slots,) int32`` id array, and
+``stats["host_syncs"]`` (blocking fetches with no newer step queued
+behind them) drops from O(steps) to O(finished requests).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Optional
 
@@ -90,6 +103,7 @@ from repro.launch import steps as steps_lib
 from repro.models import transformer
 from repro.runtime import offload as offload_lib
 from repro.runtime import paged as paged_lib
+from repro.runtime import sampling as sampling_lib
 from repro.runtime.fault_tolerance import InjectedFailure
 from repro.runtime.straggler import StragglerMonitor
 
@@ -219,7 +233,23 @@ class EngineConfig:
                              arrived request with an explicit error when
                              its TTFT SLO is infeasible given the queued
                              prefill tokens and the chunk-lane capacity
-                             (off by default)."""
+                             (off by default).
+
+    Async pipeline:
+      ``async_depth``        0 (default) = the synchronous loop: fetch
+                             logits, sample on host, block every step —
+                             kept as the differential oracle.  1 = the
+                             async pipeline: on-device sampling, a
+                             device-resident fed-back-token buffer, and
+                             one-step-lookahead dispatch (step N+1 is
+                             dispatched while step N's sampled ids are
+                             in flight; EOS reconciles one step late
+                             with a free discard).  Streams are
+                             bit-identical between the two.
+      ``sampler``            registered on-device sampler name
+                             (``runtime/sampling.py``); "greedy" is the
+                             default and the only stream-deterministic
+                             choice."""
     max_slots: int = 4
     num_pages: int = 64
     max_pages_per_slot: int = 16
@@ -243,6 +273,9 @@ class EngineConfig:
     mesh: Optional[tuple] = None    # (dp, tp) serving mesh; None = 1 device
     prefix_evict: str = "lru"       # cached prefix reclaim: lru | hit-rate
     admission_control: bool = False  # reject-on-infeasible-TTFT at admission
+    async_depth: int = 0            # 0 = synchronous oracle; 1 = one-step
+                                    # lookahead async pipeline
+    sampler: str = "greedy"         # on-device sampler (runtime/sampling.py)
 
     def __post_init__(self):
         if self.scheduler not in ("slo", "fcfs"):
@@ -265,6 +298,16 @@ class EngineConfig:
                 raise ValueError(
                     "mesh serving runs through the unified chunked step; "
                     "disable monolithic_prefill")
+        if self.async_depth not in (0, 1):
+            raise ValueError(
+                f"async_depth must be 0 (synchronous) or 1 (one-step "
+                f"lookahead), got {self.async_depth!r}")
+        if self.async_depth and self.monolithic_prefill:
+            raise ValueError(
+                "the async pipeline runs through the unified chunked step "
+                "(monolithic admission prefill blocks the host per "
+                "admission); disable monolithic_prefill")
+        sampling_lib.get_sampler(self.sampler)   # validate the name early
 
     @classmethod
     def for_trace(cls, *, max_slots: int, max_prompt: int,
@@ -306,6 +349,9 @@ class _SlotState:
     prefix_keys: list = dataclasses.field(default_factory=list)
                                   # chained hash per full prompt page, to
                                   # register once prefill completes
+    inflight: int = 0             # async: dispatched-but-unreconciled tokens
+    finished: bool = False        # async: terminal — in-flight reconciles
+                                  # for this request are discarded
 
 
 @dataclasses.dataclass
@@ -324,6 +370,22 @@ class _Preempted:
     group: int = 0                # slot group — restores are pinned to it
                                   # (the snapshot's bytes belong to that
                                   # group's pool shard)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unreconciled async step.  ``dec_ids`` /
+    ``chunk_ids`` are DEVICE arrays of sampled token ids — touching them
+    with ``np.asarray`` is the reconcile-time fetch.  The slot-state
+    references pin the requests the values belong to: a slot may be
+    recycled and re-admitted before reconcile, but ``st`` cannot — its
+    ``finished`` flag marks stale entries for free discard."""
+    dec_ids: object               # (T,) / (G, S) int32 device array
+    chunk_ids: object             # (L,) / (G, L) int32 device array | None
+    dec: list                     # [(slot, _SlotState), ...]
+    chunks: list                  # [(g, lane, slot, _SlotState, completes)]
+    step: int                     # engine step at dispatch
+    dispatch_t: float
 
 
 @dataclasses.dataclass
@@ -427,7 +489,10 @@ class StemEngine:
                       "straggler_steps": 0,
                       "prefix_hits": 0, "prefix_pages_shared": 0,
                       "prefix_cows": 0, "admission_rejects": 0,
-                      "host_syncs": 0}
+                      "host_syncs": 0, "id_fetches": 0,
+                      "lookahead_discards": 0, "pallas_fallbacks": 0,
+                      "restore_bytes": 0,
+                      "dispatch_s": 0.0, "sync_wait_s": 0.0}
         self._slot_ever_used = [False] * T
         self._seq: dict = {}                   # uid -> submission order
         self._arrival_t: dict = {}             # uid -> first-schedulable wall
@@ -457,11 +522,34 @@ class StemEngine:
         # this counter.
         k_bound = (0 if ecfg.monolithic_prefill else
                    chunked_lib.chunk_budget_bound(self.policy, P))
-        self._unified = jax.jit(steps_lib.make_unified_step(
-            bundle, stem_cfg=self.policy, budget_frac=ecfg.budget_frac,
-            chunk_k_max=k_bound, executor=ecfg.executor,
-            on_trace=_count("traces"), smesh=self.smesh),
-            donate_argnums=(1,))
+        self._async = ecfg.async_depth > 0
+        self.sampler = sampling_lib.get_sampler(ecfg.sampler)
+        if self._async:
+            # Async pipeline: sampling runs inside the trace, the decode
+            # inputs come from the device-resident fed-back-token buffer,
+            # and the step returns (slots,) int32 sampled ids — the only
+            # per-step transfer.  Donation caveat: XLA:CPU blocks the
+            # *dispatch* of a call whose donated input is still being
+            # computed, which would re-serialize the pipeline (the pools
+            # chain step to step).  On a multi-core CPU host the pipeline
+            # is worth more than zero-copy, so the async step runs
+            # undonated there (double-buffered pools, host free-running);
+            # on a single-core host nothing can overlap anyway, so the
+            # zero-copy donated update wins.  Accelerator backends
+            # dispatch donated calls asynchronously and keep both.
+            donate = (() if jax.default_backend() == "cpu"
+                      and (os.cpu_count() or 1) > 1 else (1, 2))
+            self._unified = jax.jit(steps_lib.make_unified_step(
+                bundle, stem_cfg=self.policy, budget_frac=ecfg.budget_frac,
+                chunk_k_max=k_bound, executor=ecfg.executor,
+                on_trace=_count("traces"), smesh=self.smesh,
+                sampler=self.sampler), donate_argnums=donate)
+        else:
+            self._unified = jax.jit(steps_lib.make_unified_step(
+                bundle, stem_cfg=self.policy, budget_frac=ecfg.budget_frac,
+                chunk_k_max=k_bound, executor=ecfg.executor,
+                on_trace=_count("traces"), smesh=self.smesh),
+                donate_argnums=(1,))
         if self.smesh is not None:
             # Group-vmapped page-management jits: every argument gains a
             # leading (dp,) axis — non-target groups ride along with
@@ -493,9 +581,54 @@ class StemEngine:
         self._prefill = None
         if ecfg.monolithic_prefill:
             # Legacy A/B arm: one trace per padded prompt-length bucket.
+            # The first token is sampled on-device (same sampler op as the
+            # async step), so the admission fetch is one int32, not a
+            # vocab-sized logits row.
             self._prefill = jax.jit(steps_lib.make_monolithic_prefill(
                 bundle, stem_cfg=self.policy,
-                on_trace=_count("prefill_traces")), donate_argnums=(3,))
+                on_trace=_count("prefill_traces"),
+                sampler=self.sampler), donate_argnums=(3,))
+
+        # Async pipeline state.  ``token_buf`` is the device-resident
+        # fed-back-token buffer — decode lanes read last step's sampled
+        # ids from it without a host round trip; only restores write it
+        # from the host side (``_set_token``, traced indices: one trace).
+        self._inflight: collections.deque = collections.deque()
+        self.token_buf = None
+        self._set_token = None
+        if self._async:
+            if self.smesh is not None:
+                from repro.sharding import serving as serving_lib
+                grp_sh = serving_lib.group_sharding(self.smesh)
+                self.token_buf = jax.device_put(
+                    jnp.zeros((self.groups, S), jnp.int32), grp_sh)
+                self._set_token = jax.jit(
+                    lambda buf, g, s, val: buf.at[g, s].set(val),
+                    donate_argnums=(0,), out_shardings=grp_sh)
+            else:
+                self.token_buf = jnp.zeros((T,), jnp.int32)
+                self._set_token = jax.jit(
+                    lambda buf, s, val: buf.at[s].set(val),
+                    donate_argnums=(0,))
+
+        # Restore-cost model: preemption victims are priced by the bytes
+        # their restore moves host->device over a measured-bandwidth EMA
+        # (seeded pessimistically until the first timed restore).
+        self._page_nbytes = (
+            sum(l.nbytes for l in jax.tree_util.tree_leaves(self.pools))
+            // (self.groups * ecfg.num_pages))
+        self._h2d_bw_ema: Optional[float] = None
+
+        # Pallas-fallback observability: the fused kernels silently hand
+        # unsupported configurations back to the XLA gather oracle at
+        # trace time; surface that in stats instead (kernels module keeps
+        # a process-wide counter — snapshot the baseline at init).
+        self._track_fallbacks = (
+            (ecfg.executor or self.policy.executor) == "pallas")
+        self._pallas_fb_base = 0
+        if self._track_fallbacks:
+            from repro.kernels import paged_attn
+            self._pallas_fb_base = sum(paged_attn.FALLBACKS.values())
 
     # -- scheduling ---------------------------------------------------------
 
@@ -523,16 +656,31 @@ class StemEngine:
         of the no-retrace property.  The straggler EMA is kept warm too —
         only its flag history resets."""
         self.finished.clear()
-        keep = ("traces", "prefill_traces")
+        keep = ("traces", "prefill_traces", "pallas_fallbacks")
         self.stats.update({k: 0 for k in self.stats if k not in keep})
+        self.stats["dispatch_s"] = 0.0
+        self.stats["sync_wait_s"] = 0.0
         self._slot_ever_used = [False] * self.total_slots
         self.monitor.flagged.clear()
+
+    def _refresh_fallbacks(self) -> None:
+        """Mirror the kernels module's process-wide fallback counter into
+        ``stats`` (delta since this engine was built)."""
+        if not self._track_fallbacks:
+            return
+        from repro.kernels import paged_attn
+        self.stats["pallas_fallbacks"] = (
+            sum(paged_attn.FALLBACKS.values()) - self._pallas_fb_base)
 
     @property
     def metrics(self) -> dict:
         """Live observability: straggler flags, offload residency, chaos
         counters — the serving-side mirror of ``stats`` for dashboards."""
+        self._refresh_fallbacks()
         return {
+            "inflight_steps": len(self._inflight),
+            "h2d_bw_bytes_per_s": self._h2d_bw_ema,
+            "pallas_fallbacks": self.stats["pallas_fallbacks"],
             "step_time_ema_s": self.monitor.ema,
             "straggler_steps": list(self.monitor.flagged),
             "offloaded_requests": len(self.preempted),
@@ -583,7 +731,14 @@ class StemEngine:
         pages are neither snapshotted nor evicted — their contents stay
         live for co-tenants; the record re-pins them (keeps this request's
         reference) so they cannot be reclaimed before restore.
-        Re-admission restores bit-identically with zero recompute."""
+        Re-admission restores bit-identically with zero recompute.
+
+        Async: the in-flight step is drained first — the host token list
+        and ``cache_lens`` must agree with the page contents the snapshot
+        gathers, and an unreconciled sampled id would otherwise be lost
+        with the eviction."""
+        if self._async and self._inflight:
+            self._drain()
         st = self.slots[slot]
         if st is None:
             raise ValueError(f"slot {slot} is not active")
@@ -651,6 +806,12 @@ class StemEngine:
             self._check_pages()
             return False
         snap = self.host_store.pop(rec.st.req.uid)
+        # Time the host->device scatter to feed the restore-cost model's
+        # bandwidth EMA.  Only an un-overlapped restore is a clean sample:
+        # with an async step in flight the block would also wait out the
+        # step and undersell the link.
+        measure = not (self._async and self._inflight)
+        t0 = time.perf_counter()
         if self.smesh is not None:
             rows = np.zeros((self.groups, W), np.int32)
             rows[g, :rec.npages] = pages
@@ -662,6 +823,26 @@ class StemEngine:
             row[:rec.npages] = pages
             self.pools = self._restore_pages(self.pools, jnp.asarray(row),
                                              snap)
+        nbytes = rec.npages * self._page_nbytes
+        self.stats["restore_bytes"] += nbytes
+        if measure and nbytes:
+            jax.block_until_ready(jax.tree_util.tree_leaves(self.pools)[0])
+            bw = nbytes / max(time.perf_counter() - t0, 1e-9)
+            self._h2d_bw_ema = (bw if self._h2d_bw_ema is None
+                                else 0.5 * self._h2d_bw_ema + 0.5 * bw)
+        if self._async and rec.st.tokens:
+            # Re-seed the device-resident fed-back-token buffer: the
+            # restored request's next decode step feeds its last emitted
+            # token, which left the device with the preemption drain.
+            last = jnp.asarray(rec.st.tokens[-1], jnp.int32)
+            if self.smesh is not None:
+                local = jnp.asarray(slot - g * self.slots_per_group,
+                                    jnp.int32)
+                self.token_buf = self._set_token(
+                    self.token_buf, jnp.asarray(g, jnp.int32), local, last)
+            else:
+                self.token_buf = self._set_token(
+                    self.token_buf, jnp.asarray(slot, jnp.int32), last)
         all_pages = list(rec.shared_pages) + list(pages)
         full_row = np.zeros((self.ecfg.max_pages_per_slot,), np.int32)
         full_row[:len(all_pages)] = all_pages
@@ -685,6 +866,15 @@ class StemEngine:
         could not free enough pages — no pointless offloads."""
         if (self.ecfg.scheduler != "slo" or not self.ecfg.preemption):
             return False
+        if self._async and self._inflight:
+            # Reconcile before evicting anyone: an in-flight step may
+            # finish a request outright, freeing a slot and its pages —
+            # in which case the preemption is moot and the caller can
+            # retry its allocation directly.
+            self._drain()
+            if (self._free_slot_in(group) is not None
+                    and self.allocators[group].available >= need_pages):
+                return True
         victims = [s for s in self._group_slots(group)
                    if self.slots[s] is not None
                    and self.slots[s].req.priority < priority]
@@ -699,22 +889,39 @@ class StemEngine:
             return False
         # Restore-cost model: the victim class is the LOWEST priority
         # present (never climb the ladder for a cheaper restore); within
-        # it, evict the request whose restore is cheapest — fewest PRIVATE
-        # pages, i.e. the bytes that actually round-trip through the host
-        # snapshot (shared prefix pages stay on-device either way).  Ties
-        # break toward most-recently-admitted (least sunk progress), then
-        # the higher slot id, keeping the pick deterministic.
+        # it, evict the request whose restore is cheapest in SECONDS —
+        # private pages x page nbytes over the measured host->device
+        # bandwidth EMA (``_restore_cost_s``).  Only PRIVATE pages price
+        # in: shared prefix pages stay on-device either way.  Ties break
+        # toward most-recently-admitted (least sunk progress), then the
+        # higher slot id, keeping the pick deterministic.
         lowest = min(self.slots[s].req.priority for s in victims)
         cls = [s for s in victims if self.slots[s].req.priority == lowest]
         victim = min(cls, key=lambda s: (
-            len(self.slot_pages[s]) - self.slot_nshared[s],
+            self._restore_cost_s(s),
             -self.slots[s].admitted_step, -s))
         self.preempt(victim)
         return True
 
+    # Pessimistic PCIe-class seed bandwidth until the first timed restore.
+    _BW_SEED = 8e9
+
+    def _restore_cost_s(self, slot: int) -> float:
+        """Estimated seconds to swap ``slot`` back in: the host->device
+        bytes its restore would move (private pages x page nbytes — the
+        snapshot round-trips exactly those) over the measured restore
+        bandwidth EMA.  With the uniform page size this is monotone in
+        the private-page count, so victim ordering is stable as the EMA
+        moves; the seconds scale is what ``metrics`` and future
+        multi-tier offload decisions consume."""
+        private = len(self.slot_pages[slot]) - self.slot_nshared[slot]
+        return (private * self._page_nbytes
+                / (self._h2d_bw_ema or self._BW_SEED))
+
     # -- failure paths ------------------------------------------------------
 
     def _finish_with_error(self, st: _SlotState, slot: int, error: str) -> None:
+        st.finished = True   # async: discard any in-flight work for it
         tpot = (float("nan") if len(st.tokens) < 2 else
                 (st.last_token_t - st.first_token_t) / (len(st.tokens) - 1))
         self.finished.append(FinishedRequest(
@@ -998,13 +1205,16 @@ class StemEngine:
         if self.ecfg.monolithic_prefill:
             # Legacy: prefill the whole prompt at admission (resets the
             # reserved pages inside prefill_kv_pages), per-length trace.
+            # The first token is sampled ON-DEVICE (same op as the async
+            # step) — the admission fetch is one int32, not a logits row.
             toks = np.zeros((1, padded_len), np.int32)
             toks[0, :plen] = req.prompt
-            logits, self.pools = self._prefill(
+            first_id, self.pools = self._prefill(
                 self.params, jnp.asarray(toks),
                 jnp.asarray(plen, jnp.int32), self.pools,
                 jnp.asarray(row))
-            first = int(np.argmax(np.asarray(logits)))
+            first = int(first_id)
+            self.stats["id_fetches"] += 1
             done = time.perf_counter()
             self.stats["prefills"] += 1
             self.stats["tokens_generated"] += 1
@@ -1082,6 +1292,9 @@ class StemEngine:
 
     def _recycle(self, slot: int) -> None:
         st = self.slots[slot]
+        st.finished = True   # async: the one speculative EOS-lookahead
+                             # step reconciles against this flag and is
+                             # discarded for free
         # TPOT is undefined for a single-output-token request (no
         # post-first token) — record NaN so means can exclude it.
         tpot = (float("nan") if len(st.tokens) < 2 else
@@ -1128,28 +1341,28 @@ class StemEngine:
         headroom = (slo - (now - st.arrival_t)) if slo else float("inf")
         return (-st.req.priority, headroom, st.admitted_step, s)
 
-    def _mixed_step(self) -> bool:
-        """One unified-step invocation: the scheduled decode tokens plus as
-        many prefill chunks as the token budget admits, for EVERY slot
-        group at once — the replicated host scheduler partitions its grants
-        per group (each group gets the full per-group token budget and its
-        own chunk lanes), and one jitted call advances all of them.
-        Returns whether any work ran (for straggler timing)."""
-        dec_all = [s for s, st in enumerate(self.slots)
-                   if st is not None and st.phase == "decode"]
-        pre_all = [s for s, st in enumerate(self.slots)
-                   if st is not None and st.phase == "prefill"]
-        if not dec_all and not pre_all:
-            self._last_chunk_step = [self.step_count] * self.groups
-            return False
-        # Injection point: strictly BEFORE any pool mutation, so a bounded
-        # retry of this step never double-applies summary increments.
-        if self.chaos:
-            self.chaos.maybe_fail_step(self.step_count)
+    def _grantable_decodes(self) -> list:
+        """Decode-phase slots still owed a token.  Sync: every active
+        decode slot (a finished slot recycles immediately, so the grant
+        condition is vacuous).  Async: the grant accounting counts
+        IN-FLIGHT tokens too — a max-new-tokens finish is deterministic
+        at dispatch time and never speculates; only an unknowable EOS
+        earns the single lookahead step, whose discard is free."""
+        return [s for s, st in enumerate(self.slots)
+                if st is not None and st.phase == "decode"
+                and len(st.tokens) + st.inflight < st.req.max_new_tokens]
+
+    def _schedule(self, dec_all: list, pre_all: list,
+                  sched_now: float) -> tuple:
+        """The token-budget grant pass, shared verbatim by the sync and
+        async paths: partition this step's decode grants and prefill-chunk
+        grants per slot group.  Pure host bookkeeping — nothing here
+        touches the device, which is what lets the async loop run it for
+        step N+1 while step N is still in flight.  Returns
+        ``(dec, grants)``: the granted decode slots (all groups) and the
+        per-group lists of granted chunk slots."""
         self.stats["max_concurrency"] = max(self.stats["max_concurrency"],
                                             len(dec_all) + len(pre_all))
-        sched_now = time.perf_counter()
-
         G, Sg = self.groups, self.slots_per_group
         C = self.chunk_size
         cap = max(1, self.token_budget)         # per slot group
@@ -1205,7 +1418,32 @@ class StemEngine:
                 self._last_chunk_step[g] = self.step_count
             dec += dec_g
             grants.append(grant_g)
+        return dec, grants
 
+    def _mixed_step(self) -> bool:
+        """One SYNCHRONOUS unified-step invocation: the scheduled decode
+        tokens plus as many prefill chunks as the token budget admits, for
+        EVERY slot group at once — the replicated host scheduler
+        partitions its grants per group (each group gets the full
+        per-group token budget and its own chunk lanes), and one jitted
+        call advances all of them; the host then blocks on the logits
+        fetch and samples with ``np.argmax``.  This is the
+        ``async_depth=0`` differential oracle.  Returns whether any work
+        ran (for straggler timing)."""
+        dec_all = self._grantable_decodes()
+        pre_all = [s for s, st in enumerate(self.slots)
+                   if st is not None and st.phase == "prefill"]
+        if not dec_all and not pre_all:
+            self._last_chunk_step = [self.step_count] * self.groups
+            return False
+        # Injection point: strictly BEFORE any pool mutation, so a bounded
+        # retry of this step never double-applies summary increments.
+        if self.chaos:
+            self.chaos.maybe_fail_step(self.step_count)
+        dec, grants = self._schedule(dec_all, pre_all, time.perf_counter())
+
+        G, Sg = self.groups, self.slots_per_group
+        C = self.chunk_size
         T, P = self.total_slots, self.ecfg.max_pages_per_slot
         tokens = np.zeros((T, 1), np.int32)
         dec_table = np.zeros((T, P), np.int32)
@@ -1258,8 +1496,11 @@ class StemEngine:
             dec_in = jnp.asarray(tokens)
             tab_in = jnp.asarray(dec_table)
             len_in = jnp.asarray(dec_lens)
+        t_dispatch = time.perf_counter()
         dec_logits, chunk_logits, self.pools = self._unified(
             self.params, self.pools, dec_in, tab_in, len_in, chunk)
+        t_fetch = time.perf_counter()
+        self.stats["dispatch_s"] += t_fetch - t_dispatch
         # The ONLY per-step host syncs, mesh or not: one logits fetch per
         # active lane kind (tracked so the scaling benchmark can assert the
         # mesh adds none).
@@ -1274,6 +1515,7 @@ class StemEngine:
                 chunk_logits = chunk_logits[None]       # (1, L, vocab)
             self.stats["host_syncs"] += 1
         now = time.perf_counter()
+        self.stats["sync_wait_s"] += now - t_fetch
         self.stats["step_calls"] += 1
         if dec:
             self.stats["decode_steps"] += 1
@@ -1317,6 +1559,219 @@ class StemEngine:
                         self._recycle(s)
         return True
 
+    # -- async pipeline -----------------------------------------------------
+
+    def _dispatch(self, dec: list, grants: list) -> None:
+        """Launch one sampled unified step and return WITHOUT waiting for
+        its results.  All value-independent state advances here, at
+        dispatch time, so the next ``_schedule`` sees it: ``cache_lens``
+        (+1 per granted decode — the fed-back token will be cached),
+        ``prefill_pos``/phase flips, prefix registration (the completing
+        chunk's writes land before any later-dispatched reader, by
+        per-device program order), and the step/chunk/prefill counters.
+        Token VALUES — emissions, EOS, timestamps — wait for
+        ``_reconcile``.  Decode inputs come from the device-resident
+        ``token_buf``; idle lanes are masked out and their trash-page
+        writes discarded, exactly like the sync step."""
+        G, Sg, C = self.groups, self.slots_per_group, self.chunk_size
+        T, P = self.total_slots, self.ecfg.max_pages_per_slot
+        mask = np.zeros((T,), bool)
+        dec_table = np.zeros((T, P), np.int32)
+        dec_lens = np.zeros((T,), np.int32)
+        dec_entries = []
+        for s in dec:
+            st = self.slots[s]
+            mask[s] = True
+            dec_table[s] = self.page_table[s]
+            dec_lens[s] = self.cache_lens[s]
+            st.last_sched_step = self.step_count
+            dec_entries.append((s, st))
+
+        any_grant = any(grants)
+        chunk = None
+        chunk_entries = []
+        if any_grant:
+            L, nc = self.chunk_lanes, C // self.page_size
+            ctoks = np.zeros((G, L, C), np.int32)
+            ctable = np.zeros((G, L, P), np.int32)
+            cstart = np.zeros((G, L), np.int32)
+            ctrue = np.zeros((G, L), np.int32)
+            cbud = np.zeros((G, L, nc), np.int32)
+            clast = np.zeros((G, L), np.int32)
+            # Chunk-lane feedback routing: a COMPLETING chunk's sampled id
+            # is the request's first token — "emit" steers it into the
+            # lane's slot entry of token_buf inside the trace, so the
+            # decode that follows next step reads it with no host hop.
+            cslot = np.zeros((G, L), np.int32)
+            cemit = np.zeros((G, L), bool)
+            for g, grant_g in enumerate(grants):
+                for lane, s in enumerate(grant_g):
+                    st = self.slots[s]
+                    pos = st.prefill_pos
+                    avail = st.padded[pos:pos + C]
+                    ctoks[g, lane, :len(avail)] = avail
+                    ctable[g, lane] = self.page_table[s]
+                    cstart[g, lane] = pos
+                    ctrue[g, lane] = st.true_len
+                    cbud[g, lane] = chunked_lib.chunk_budget_rows(
+                        self.policy, len(st.padded), pos, nc)
+                    clast[g, lane] = min(max(st.true_len - 1 - pos, 0),
+                                         C - 1)
+                    completes = pos + C >= len(st.padded)
+                    cslot[g, lane] = s - g * Sg
+                    cemit[g, lane] = completes
+                    chunk_entries.append((g, lane, s, st, completes))
+            grp = ((lambda a: a) if self.smesh is not None
+                   else (lambda a: a[0]))
+            chunk = {"tokens": jnp.asarray(grp(ctoks)),
+                     "page_table": jnp.asarray(grp(ctable)),
+                     "start": jnp.asarray(grp(cstart)),
+                     "true_len": jnp.asarray(grp(ctrue)),
+                     "budgets": jnp.asarray(grp(cbud)),
+                     "last": jnp.asarray(grp(clast)),
+                     "slot": jnp.asarray(grp(cslot)),
+                     "emit": jnp.asarray(grp(cemit))}
+
+        if self.smesh is not None:
+            mask_in = jnp.asarray(mask.reshape(G, Sg))
+            tab_in = jnp.asarray(dec_table.reshape(G, Sg, P))
+            len_in = jnp.asarray(dec_lens.reshape(G, Sg))
+        else:
+            mask_in = jnp.asarray(mask)
+            tab_in = jnp.asarray(dec_table)
+            len_in = jnp.asarray(dec_lens)
+        t0 = time.perf_counter()
+        dec_ids, chunk_ids, self.token_buf, self.pools = self._unified(
+            self.params, self.pools, self.token_buf, mask_in, tab_in,
+            len_in, chunk)
+        t1 = time.perf_counter()
+        self.stats["dispatch_s"] += t1 - t0
+        self.stats["step_calls"] += 1
+        if dec:
+            self.stats["decode_steps"] += 1
+
+        for s in dec:
+            self.cache_lens[s] += 1   # the fed-back token is now cached
+            self.slots[s].inflight += 1
+        for g, lane, s, st, completes in chunk_entries:
+            st.prefill_pos += C
+            self.stats["chunks"] += 1
+            if completes:
+                st.phase = "decode"
+                self.cache_lens[s] = st.true_len
+                st.inflight += 1      # the first token is in flight
+                if st.prefix_keys:
+                    for j, key in enumerate(st.prefix_keys):
+                        self.allocators[g].register(
+                            self.slot_pages[s][j], key)
+                self.stats["prefills"] += 1
+        self._inflight.append(_InFlight(
+            dec_ids=dec_ids, chunk_ids=chunk_ids, dec=dec_entries,
+            chunks=chunk_entries, step=self.step_count, dispatch_t=t1))
+
+    def _reconcile(self, infl: _InFlight) -> None:
+        """Absorb one in-flight step's sampled ids into host state: append
+        decode tokens, materialize chunk-completion first tokens, stamp
+        emission timestamps, detect EOS/max-tokens, recycle.  Entries
+        whose request finished in the meantime (the EOS one-step
+        lookahead, or an abort) are DISCARDED — their speculative step
+        wrote only into the request's own still-reserved pages, so the
+        discard costs nothing and streams stay bit-identical to the sync
+        oracle.  ``host_syncs`` counts only non-overlapped reconciles
+        (no newer dispatched step behind this one): those are the fetches
+        that can leave the device idle — O(finished requests), not
+        O(steps)."""
+        overlapped = bool(self._inflight)
+        t0 = time.perf_counter()
+        dec_ids = chunk_ids = None
+        if infl.dec:
+            dec_ids = np.asarray(infl.dec_ids)
+            if self.smesh is not None:
+                dec_ids = dec_ids.reshape(-1)
+            self.stats["id_fetches"] += 1
+        if infl.chunks:
+            chunk_ids = np.asarray(infl.chunk_ids)
+            if self.smesh is None:
+                chunk_ids = chunk_ids[None]             # (1, L)
+            self.stats["id_fetches"] += 1
+        now = time.perf_counter()
+        self.stats["sync_wait_s"] += now - t0
+        if not overlapped and (infl.dec or infl.chunks):
+            self.stats["host_syncs"] += 1
+        self.monitor.observe(infl.step, now - infl.dispatch_t)
+
+        for s, st in infl.dec:
+            st.inflight -= 1
+            if st.finished:
+                self.stats["lookahead_discards"] += 1
+                continue
+            st.tokens.append(int(dec_ids[s]))
+            st.token_latencies_s.append(now - st.last_token_t)
+            st.last_token_t = now
+            self.stats["tokens_generated"] += 1
+            if self._is_finished(st):
+                self._recycle(s)
+        for g, lane, s, st, completes in infl.chunks:
+            if not completes:
+                continue
+            st.inflight -= 1
+            if st.finished:
+                self.stats["lookahead_discards"] += 1
+                continue
+            st.tokens = [int(chunk_ids[g, lane])]
+            st.first_token_t = st.last_token_t = now
+            st.ttft_s = now - st.arrival_t
+            self.stats["tokens_generated"] += 1
+            if self._is_finished(st):
+                self._recycle(s)
+
+    def _drain(self) -> None:
+        """Reconcile every in-flight step, oldest first.  Callers that
+        mutate pools or host token state out of band (preemption/offload,
+        injected-failure aborts, the run() tail) must drain first: the
+        device pipeline is always safe under program order, but host-side
+        ``st.tokens`` runs one step behind it."""
+        while self._inflight:
+            self._reconcile(self._inflight.popleft())
+
+    def drain(self) -> None:
+        """Public: block until every dispatched step is reconciled.
+        No-op for the synchronous engine.  Drivers stepping the engine
+        manually (rather than through ``run``) call this before reading
+        ``finished``/``stats`` as final."""
+        self._drain()
+
+    def _async_step(self) -> bool:
+        """One ASYNC engine iteration: schedule from the current (one step
+        stale in values, exact in structure) host state, dispatch without
+        blocking, then reconcile only what exceeds ``async_depth``.  With
+        depth 1 the host prepares and launches step N+1 while the device
+        crunches step N — the logits-fetch stall of the sync loop
+        disappears from the critical path."""
+        dec_all = self._grantable_decodes()
+        pre_all = [s for s, st in enumerate(self.slots)
+                   if st is not None and st.phase == "prefill"]
+        if not dec_all and not pre_all:
+            self._last_chunk_step = [self.step_count] * self.groups
+            self._drain()
+            return False
+        # Same injection point as the sync loop: strictly before this
+        # step's dispatch, so a bounded retry never double-applies — and
+        # the already-in-flight step is untouched by the failure.
+        if self.chaos:
+            self.chaos.maybe_fail_step(self.step_count)
+        dec, grants = self._schedule(dec_all, pre_all, time.perf_counter())
+        if not dec and not any(grants):
+            # Every grantable token is already in flight (e.g. the final
+            # token of the last active request): reconcile to make
+            # progress instead of dispatching an empty step.
+            self._drain()
+            return False
+        self._dispatch(dec, grants)
+        while len(self._inflight) > self.ecfg.async_depth:
+            self._reconcile(self._inflight.popleft())
+        return True
+
     def _guarded_step(self) -> None:
         """The failure boundary around the mixed step: bounded retry of a
         failed step (injection precedes pool mutation, so retry is sound),
@@ -1325,21 +1780,38 @@ class StemEngine:
         by the StragglerMonitor; failed/idle ones don't pollute its EMA."""
         retries = 0
         while True:
-            self.monitor.start()
+            if not self._async:
+                self.monitor.start()
             try:
-                did_work = self._mixed_step()
+                did_work = (self._async_step() if self._async
+                            else self._mixed_step())
             except InjectedFailure as e:
-                self.monitor.cancel()
+                if not self._async:
+                    self.monitor.cancel()
                 self.stats["step_failures"] += 1
                 retries += 1
                 if retries > self.ecfg.max_step_retries:
+                    if self._async:
+                        # Drain before degrading: the in-flight step may
+                        # finish (or already hold tokens for) the victim
+                        # we are about to abort, and the abort frees
+                        # pages the pipeline still references host-side.
+                        self._drain()
                     victim = self._lowest_priority_active()
                     if victim is None:
+                        if self._async:
+                            continue   # drain cleared the actives; the
+                                       # retry sees no work and returns
                         raise
                     self._abort(victim,
                                 f"aborted: step failed {retries} times ({e})")
                     retries = 0
                 continue
+            if self._async:
+                # Step latency is observed per reconcile (dispatch ->
+                # ids materialized), not start/stop around the host-only
+                # dispatch — see ``_reconcile``.
+                return
             if did_work:
                 self.monitor.stop(self.step_count)
             else:
@@ -1360,6 +1832,8 @@ class StemEngine:
         self._admit()
         self._guarded_step()
         self.step_count += 1
+        if self._track_fallbacks:
+            self._refresh_fallbacks()
 
     @property
     def pending(self) -> int:
@@ -1383,4 +1857,6 @@ class StemEngine:
                     waiting=[r.uid for r in self.waiting],
                     preempted=[rec.st.req.uid for rec in self.preempted])
             self.step()
+        if self._inflight:          # belt-and-braces: pending==0 implies
+            self._drain()           # drained, but keep the invariant local
         return sorted(self.finished, key=lambda f: f.uid)

@@ -103,6 +103,15 @@ def pool_sharding(smesh: ServingMesh) -> NamedSharding:
     return NamedSharding(smesh.mesh, POOL_SPEC)
 
 
+def group_sharding(smesh: ServingMesh) -> NamedSharding:
+    """Sharding for per-slot-group host arrays — leading ``(dp,)`` axis
+    split over data-parallel groups, everything else replicated.  The
+    async engine's device-resident fed-back-token buffer lives here:
+    each group's decode lanes read their own sampled ids locally, so the
+    per-step logits all-gather is replaced by a ``(dp, S) int32`` fetch."""
+    return NamedSharding(smesh.mesh, GROUP_SPEC)
+
+
 def shard_pools(pools, smesh: ServingMesh):
     """Broadcast freshly-initialised pools to ``(dp,)+shape`` and place
     them: dp slot groups each get a full pool copy, KV-head axis sharded

@@ -1,0 +1,367 @@
+"""Async engine loop tests (runtime/engine.py async pipeline +
+runtime/sampling.py + the pallas-fallback observability counter).
+
+The load-bearing property is **bit-identity**: the async pipeline
+(on-device sampling, device-resident fed-back-token buffer, one-step
+lookahead dispatch) must emit exactly the streams of the synchronous
+oracle loop — across policies, under chaos, through preempt/restore
+cycles, and with EOS termination (where the one speculative lookahead
+step is discarded for free).  On top of that, the perf contract: the
+async loop's blocking host syncs are O(finished requests), not O(steps),
+and it still compiles exactly two traces.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import policy as policy_lib
+from repro.core.config import StemConfig
+from repro.kernels import paged_attn
+from repro.models import registry
+from repro.runtime import sampling as sampling_lib
+from repro.runtime.chaos import ChaosConfig, ChaosInjector
+from repro.runtime.engine import EngineConfig, Request, StemEngine
+
+TINY = ArchConfig(
+    name="async-tiny", family="dense", num_layers=2, d_model=32,
+    num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+    qk_norm=True, dtype="float32",
+)
+STEM = StemConfig(block_size=8, sink_blocks=1, local_blocks=1,
+                  min_budget_blocks=2, stride=4)
+
+TRACE = [  # (prompt_len, max_new_tokens, arrival_step)
+    (5, 4, 0),
+    (13, 6, 0),
+    (8, 3, 1),
+    (20, 5, 3),
+    (9, 4, 5),
+]
+
+
+@pytest.fixture(scope="module")
+def built():
+    bundle = registry.build(TINY)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+def _requests():
+    rng = np.random.RandomState(7)
+    return [Request(uid=uid,
+                    prompt=rng.randint(0, TINY.vocab_size,
+                                       size=(plen,)).astype(np.int32),
+                    max_new_tokens=mnt, arrival_step=arr)
+            for uid, (plen, mnt, arr) in enumerate(TRACE)]
+
+
+def _ecfg(max_slots, **kw):
+    per_slot = -(-max(p + n for p, n, _ in TRACE) // STEM.block_size)
+    return EngineConfig(max_slots=max_slots,
+                        num_pages=1 + max_slots * per_slot,
+                        max_pages_per_slot=per_slot, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity differentials: async == sync oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy_name", ["stem", "streaming"])
+def test_async_matches_sync_bit_identical(built, policy_name):
+    """The full staggered/recycling trace through both loops, per policy:
+    identical greedy streams, every page returned, in-flight queue empty,
+    and — with no EOS configured — zero lookahead discards (max-token
+    finishes are deterministic at grant time and never speculate)."""
+    bundle, params = built
+    pol = policy_lib.get_policy(policy_name).with_updates(
+        block_size=8, stride=4, sink_blocks=1, local_blocks=1,
+        min_budget_blocks=2, ignore_missing=True)
+
+    sync = StemEngine(bundle, params, pol, _ecfg(2))
+    want = {f.uid: f.tokens for f in sync.run(_requests())}
+
+    eng = StemEngine(bundle, params, pol, _ecfg(2, async_depth=1))
+    fin = eng.run(_requests())
+
+    assert {f.uid: f.tokens for f in fin} == want, (
+        f"policy {policy_name}: async stream diverged from sync oracle")
+    for f, (_, mnt, _) in zip(fin, TRACE):
+        assert len(f.tokens) == mnt, "speculative token leaked into stream"
+    assert not eng._inflight
+    assert eng.stats["lookahead_discards"] == 0
+    assert eng.allocator.available == eng.ecfg.num_pages - 1
+    eng.allocator.check_conservation([])
+
+
+def test_async_two_traces_and_o1_host_syncs(built):
+    """The perf contract: the async sampled step still compiles exactly
+    two traces (mixed + decode-only), the per-step transfers are tiny id
+    fetches, and *blocking* host syncs collapse from O(decode steps) to
+    O(finished requests) — the only non-overlapped reconciles are
+    end-of-request drains."""
+    bundle, params = built
+    sync = StemEngine(bundle, params, STEM, _ecfg(2))
+    sync.run(_requests())
+
+    eng = StemEngine(bundle, params, STEM, _ecfg(2, async_depth=1))
+    fin = eng.run(_requests())
+
+    assert eng.stats["traces"] == 2
+    assert eng.stats["host_syncs"] < sync.stats["host_syncs"]
+    assert eng.stats["host_syncs"] <= 2 * len(fin), (
+        "async host syncs must be O(finished requests), got "
+        f"{eng.stats['host_syncs']} for {len(fin)} requests")
+    # every reconcile fetched ids; most overlapped with the next dispatch
+    assert eng.stats["id_fetches"] >= eng.stats["host_syncs"]
+    # one tiny fetch per lane (decode / chunk) per dispatched step
+    assert (eng.stats["step_calls"] <= eng.stats["id_fetches"]
+            <= 2 * eng.stats["step_calls"])
+    assert eng.metrics["inflight_steps"] == 0
+
+
+def test_eos_lookahead_discard_free(built):
+    """EOS reconciles one step late under async: pick a mid-stream token
+    from the sync run as eos_id, rerun both loops — streams stay
+    bit-identical (the speculative step past EOS wrote only into the
+    request's own reserved pages) and the discard is visible in stats."""
+    bundle, params = built
+    probe = StemEngine(bundle, params, STEM, _ecfg(2))
+    ref = probe.run(_requests())
+    # a token strictly before the stream tail => EOS fires mid-decode,
+    # while the lookahead step for that slot is already in flight
+    eos = ref[1].tokens[2]
+
+    sync = StemEngine(bundle, params, STEM, _ecfg(2, eos_id=eos))
+    want = sync.run(_requests())
+
+    eng = StemEngine(bundle, params, STEM, _ecfg(2, async_depth=1,
+                                                 eos_id=eos))
+    fin = eng.run(_requests())
+
+    assert {f.uid: f.tokens for f in fin} == {f.uid: f.tokens for f in want}
+    assert any(f.tokens and f.tokens[-1] == eos
+               and len(f.tokens) < mnt
+               for f, (_, mnt, _) in zip(fin, TRACE)), (
+        "scenario no longer exercises early EOS termination")
+    assert eng.stats["lookahead_discards"] >= 1
+    # at most one speculative step per early-EOS finish (a slot may also
+    # reconcile EOS with nothing in flight — drain steps, grant races)
+    assert eng.stats["lookahead_discards"] <= sum(
+        1 for f, (_, mnt, _) in zip(fin, TRACE)
+        if f.tokens[-1] == eos and len(f.tokens) < mnt)
+    eng.allocator.check_conservation([])
+
+
+def test_async_under_chaos_bit_identical(built):
+    """Transient faults (alloc denial + one step failure, both within the
+    retry bounds) with the lookahead pipeline live: outputs must match the
+    chaos-free sync run — the drain-before-mutate rule keeps in-flight
+    speculative work consistent through recovery paths."""
+    bundle, params = built
+    rng = np.random.RandomState(5)
+    reqs = [Request(uid=i,
+                    prompt=rng.randint(0, TINY.vocab_size,
+                                       size=(10 + 3 * i,)).astype(np.int32),
+                    max_new_tokens=5)
+            for i in range(4)]
+    reqs.append(Request(uid=9,
+                        prompt=rng.randint(0, TINY.vocab_size,
+                                           size=(9,)).astype(np.int32),
+                        max_new_tokens=3, priority=2, arrival_step=5))
+    per_slot = -(-(20 + 8) // STEM.block_size)
+    ecfg = EngineConfig(max_slots=2, num_pages=1 + 2 * per_slot,
+                        max_pages_per_slot=per_slot)
+
+    clean = StemEngine(bundle, params, STEM, ecfg)
+    want = {f.uid: f.tokens for f in
+            clean.run([dataclasses.replace(r) for r in reqs])}
+
+    chaos = ChaosInjector(ChaosConfig(deny_alloc_steps=(0,), fail_steps=(3,)))
+    eng = StemEngine(bundle, params, STEM,
+                     dataclasses.replace(ecfg, async_depth=1), chaos=chaos)
+    fin = eng.run(reqs)
+
+    assert chaos.counts["alloc_denied"] == 1
+    assert chaos.counts["step_failed"] == 1
+    assert eng.stats["aborts"] == 0
+    assert len(fin) == len(reqs) and all(f.error is None for f in fin)
+    assert {f.uid: f.tokens for f in fin} == want, "chaos changed outputs"
+    eng.allocator.check_conservation([])
+
+
+def test_async_preempt_restore_cycle_bit_identical(built):
+    """Priority preemption mid-pipeline: the in-flight step drains before
+    the victim's pages move, the HP request jumps the queue, and both
+    streams match the sync run of the same scenario bit-for-bit."""
+    bundle, params = built
+    rng = np.random.RandomState(23)
+    mk = lambda uid, plen, mnt, **kw: Request(
+        uid=uid,
+        prompt=rng.randint(0, TINY.vocab_size, size=(plen,)).astype(np.int32),
+        max_new_tokens=mnt, **kw)
+    lp = mk(0, 20, 8, priority=0)
+    hp = mk(1, 13, 4, priority=1, arrival_step=4)
+    per_slot = -(-(20 + 8) // STEM.block_size)
+    ecfg = EngineConfig(max_slots=1, num_pages=1 + per_slot,
+                        max_pages_per_slot=per_slot)
+
+    sync = StemEngine(bundle, params, STEM, ecfg)
+    want = sync.run([dataclasses.replace(lp), dataclasses.replace(hp)])
+    assert sync.stats["preemptions"] == 1
+
+    eng = StemEngine(bundle, params, STEM,
+                     dataclasses.replace(ecfg, async_depth=1))
+    fin = eng.run([lp, hp])
+    assert eng.stats["preemptions"] == 1 and eng.stats["restores"] == 1
+    assert fin[0].tokens == want[0].tokens
+    assert fin[1].tokens == want[1].tokens
+    assert fin[1].finished_step < fin[0].finished_step
+    assert eng.stats["restore_bytes"] > 0
+    eng.allocator.check_conservation([])
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="async_depth"):
+        EngineConfig(async_depth=2)
+    with pytest.raises(ValueError, match="monolithic"):
+        EngineConfig(async_depth=1, monolithic_prefill=True)
+    with pytest.raises(ValueError, match="unknown sampler"):
+        EngineConfig(sampler="metropolis")
+
+
+# ---------------------------------------------------------------------------
+# Sampler ops + registry (runtime/sampling.py)
+# ---------------------------------------------------------------------------
+
+def test_greedy_sampler_matches_host_argmax_with_ties():
+    """On-device greedy must reproduce ``np.argmax`` exactly — including
+    first-maximal-index tie-breaking, the case that would silently break
+    the async==sync differential."""
+    s = sampling_lib.get_sampler("greedy")
+    assert s.deterministic
+    rng = np.random.RandomState(0)
+    logits = rng.randn(4, 16).astype(np.float32)
+    logits[1, 3] = logits[1, 11] = logits[1].max() + 1.0   # exact tie
+    logits[2, :] = 0.0                                     # all-way tie
+    got = np.asarray(s(jnp.asarray(logits)))
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, np.argmax(logits, axis=-1))
+
+
+def test_sampler_registry():
+    with pytest.raises(ValueError, match="unknown sampler"):
+        sampling_lib.get_sampler("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        sampling_lib.register_sampler("greedy", sampling_lib.GreedySampler)
+    sampling_lib.register_sampler("test-custom", sampling_lib.GreedySampler)
+    try:
+        assert isinstance(sampling_lib.get_sampler("test-custom"),
+                          sampling_lib.GreedySampler)
+    finally:
+        del sampling_lib._SAMPLERS["test-custom"]
+
+
+def test_temperature_sampler_op_level():
+    with pytest.raises(ValueError, match="temperature"):
+        sampling_lib.TemperatureSampler(temperature=0.0)
+    s = sampling_lib.TemperatureSampler(temperature=0.7)
+    assert not s.deterministic
+    logits = jnp.asarray(np.random.RandomState(1).randn(3, 8), jnp.float32)
+    with pytest.raises(ValueError, match="PRNG key"):
+        s(logits)
+    ids = np.asarray(s(logits, key=jax.random.PRNGKey(0)))
+    assert ids.shape == (3,) and ids.dtype == np.int32
+    assert ((ids >= 0) & (ids < 8)).all()
+    # temperature -> 0 limit concentrates on the argmax
+    cold = sampling_lib.TemperatureSampler(temperature=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(cold(logits, key=jax.random.PRNGKey(0))),
+        np.argmax(np.asarray(logits), axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Pallas fallback observability (kernels/paged_attn.py + engine.stats)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _OpaqueZeroMetric:
+    """StreamingMetric's math under a class the fused kernels do not
+    classify — forces the silent XLA-oracle fallback at both call sites."""
+
+    def prefill_scores(self, q, k, v, *, block_size):
+        return policy_lib.StreamingMetric().prefill_scores(
+            q, k, v, block_size=block_size)
+
+    def decode_scores(self, q, k_groups, v_mag):
+        return policy_lib.StreamingMetric().decode_scores(q, k_groups, v_mag)
+
+    def chunk_scores(self, q, k_groups, v_mag, *, block_size):
+        return policy_lib.StreamingMetric().chunk_scores(
+            q, k_groups, v_mag, block_size=block_size)
+
+
+def test_pallas_fallback_counted_and_warned_once(built):
+    """A pallas-executor engine whose metric the fused kernels cannot
+    serve: the fallback is no longer silent — it warns once per site,
+    counts per trace in ``FALLBACKS``, and surfaces in
+    ``engine.stats['pallas_fallbacks']`` (surviving reset_metrics)."""
+    bundle, params = built
+    pol = policy_lib.get_policy("streaming").with_updates(
+        block_size=8, stride=4, sink_blocks=1, local_blocks=1,
+        min_budget_blocks=2, ignore_missing=True)
+    pol = dataclasses.replace(pol, metric=_OpaqueZeroMetric(),
+                              name="opaque-zero")
+    assert paged_attn._metric_kind(pol.metric) is None
+
+    saved_warned = set(paged_attn._WARNED)
+    paged_attn._WARNED.clear()
+    base = dict(paged_attn.FALLBACKS)
+    try:
+        eng = StemEngine(bundle, params, pol,
+                         _ecfg(2, executor="pallas", async_depth=1))
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            fin = eng.run(_requests()[:2])
+        assert len(fin) == 2 and all(f.error is None for f in fin)
+
+        delta = {k: paged_attn.FALLBACKS.get(k, 0) - base.get(k, 0)
+                 for k in paged_attn.FALLBACKS}
+        assert delta.get("decode", 0) >= 1
+        assert delta.get("chunk", 0) >= 1
+        total = sum(v for v in delta.values() if v > 0)
+        assert eng.stats["pallas_fallbacks"] == total
+
+        # warn-once: a second run through the SAME sites stays quiet
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            eng2 = StemEngine(bundle, params, pol,
+                              _ecfg(2, executor="pallas"))
+            eng2.run(_requests()[:1])
+        # per-engine baseline: eng2 counts only its own traces
+        assert 0 < eng2.stats["pallas_fallbacks"] <= total
+
+        eng.reset_metrics()
+        assert eng.stats["pallas_fallbacks"] == total, (
+            "fallback count must survive reset_metrics (it is a property "
+            "of the compiled traces, like stats['traces'])")
+    finally:
+        paged_attn._WARNED.clear()
+        paged_attn._WARNED.update(saved_warned)
+
+
+def test_xla_engine_reports_no_fallbacks(built):
+    """The default XLA executor takes no pallas path at all — the counter
+    must stay 0 even if other tests bumped the module-level dict."""
+    bundle, params = built
+    eng = StemEngine(bundle, params, STEM, _ecfg(2, async_depth=1))
+    eng.run(_requests()[:2])
+    assert eng.stats["pallas_fallbacks"] == 0

@@ -276,6 +276,54 @@ def test_preemption_victim_minimizes_restore_cost(built):
     eng.allocator.check_conservation([])
 
 
+def test_restore_cost_model_prices_bytes_over_bandwidth(built):
+    """The victim cost is host->device BYTES over a measured-bandwidth
+    EMA, not a page count: ``_restore_cost_s`` must be exactly
+    ``private_pages * page_nbytes / bandwidth`` (monotone in private
+    pages, so the ordering pin above is implied), the EMA must be seeded
+    before any measurement and populated after a real preempt/restore
+    cycle, and the moved bytes must be accounted in stats/metrics."""
+    bundle, params = built
+    rng = np.random.RandomState(31)
+    small = Request(uid=0, prompt=rng.randint(0, 64, size=(5,)).astype(np.int32),
+                    max_new_tokens=3)
+    big = Request(uid=1, prompt=rng.randint(0, 64, size=(20,)).astype(np.int32),
+                  max_new_tokens=8)
+    hp = Request(uid=2, prompt=rng.randint(0, 64, size=(13,)).astype(np.int32),
+                 max_new_tokens=4, priority=1, arrival_step=2)
+    per_slot = -(-28 // STEM.block_size)
+    ecfg = EngineConfig(max_slots=2, num_pages=1 + 3 * per_slot,
+                        max_pages_per_slot=per_slot)
+    eng = StemEngine(bundle, params, STEM, ecfg)
+    assert eng._page_nbytes > 0
+    assert eng._h2d_bw_ema is None          # unmeasured: seed bandwidth
+
+    eng.submit(dataclasses.replace(small))
+    eng.submit(dataclasses.replace(big))
+    eng.step(); eng.step()
+    s_small = next(s for s, st in enumerate(eng.slots) if st.req.uid == 0)
+    s_big = next(s for s, st in enumerate(eng.slots) if st.req.uid == 1)
+    n_small = len([p for p in eng.slot_pages[s_small] if p != 0])
+    n_big = len([p for p in eng.slot_pages[s_big] if p != 0])
+    assert n_big > n_small
+    for s, n in ((s_small, n_small), (s_big, n_big)):
+        assert eng._restore_cost_s(s) == pytest.approx(
+            n * eng._page_nbytes / eng._BW_SEED)
+    assert eng._restore_cost_s(s_small) < eng._restore_cost_s(s_big)
+
+    eng.submit(dataclasses.replace(hp))
+    fin = eng.run()
+    assert eng.stats["preemptions"] == 1 and eng.stats["restores"] == 1
+    assert all(f.error is None for f in fin)
+    # the round-trip measured real bandwidth and accounted the bytes
+    assert eng._h2d_bw_ema is not None and eng._h2d_bw_ema > 0
+    assert eng.metrics["h2d_bw_bytes_per_s"] == eng._h2d_bw_ema
+    assert any(f.preemptions == 1 for f in fin)
+    assert eng.stats["restore_bytes"] > 0
+    assert eng.stats["restore_bytes"] % eng._page_nbytes == 0
+    eng.allocator.check_conservation([])
+
+
 def test_allocator_evict_restore_conservation():
     a = PageAllocator(8)
     held = a.alloc(3)

@@ -193,6 +193,31 @@ def test_mesh_engine_bitwise_vs_single_device(served, mesh):
         alloc.check_conservation([])
 
 
+@pytest.mark.parametrize("mesh", [(1, 2), (2, 1), (2, 2)])
+def test_mesh_engine_async_bitwise(served, mesh):
+    """The async pipeline under the mesh: on-device sampling replaces the
+    per-step logits all-gather with a sharded ``(dp, S) int32`` token
+    buffer, and one-step lookahead overlaps dispatch with the id fetch —
+    streams must still be bit-identical to the single-device SYNC oracle
+    (the strongest cross-product differential), with the same two traces
+    and O(finished-requests) blocking host syncs."""
+    bundle, params = served
+    ref = StemEngine(bundle, params, STEM_SRV, _serve_ecfg()).run(
+        _serve_requests())
+    eng = StemEngine(bundle, params, STEM_SRV,
+                     _serve_ecfg(mesh=mesh, async_depth=1))
+    got = eng.run(_serve_requests())
+    for r, g in zip(ref, got):
+        assert r.tokens == g.tokens, \
+            f"uid {r.uid}: async mesh {mesh} diverged from sync 1-device"
+        assert g.error is None
+    assert eng.stats["traces"] == 2
+    assert eng.stats["host_syncs"] <= 2 * len(got)
+    assert not eng._inflight
+    for alloc in eng.allocators:
+        alloc.check_conservation([])
+
+
 def test_mesh_pallas_matches_single_device_xla(served):
     """Differential across BOTH executors under the mesh: the fused Pallas
     kernels read their KV-head extent from the (local) pool shard, so the
